@@ -1,0 +1,34 @@
+"""Fig 11 — PPL vs DAS ratio S_a and sparse-attention TL_SA (tiny scale).
+
+Paper claim: S_a=1/2 is nearly free, S_a=1/4 (keep 8/32) degrades sharply;
+TL_SA beyond ~window has marginal effect.
+"""
+import dataclasses
+import os
+
+from benchmarks.common import tiny_lm, train_eval_ppl
+from repro.configs.base import DasConfig, LpsaConfig
+
+STEPS = int(os.environ.get("BENCH_STEPS", "150"))
+
+
+def run():
+    rows = []
+    for keep in (32, 16, 8):  # S_a = 1, 1/2, 1/4
+        cfg = tiny_lm(f"sa{keep}")
+        cfg = dataclasses.replace(cfg, ternary=dataclasses.replace(
+            cfg.ternary, das=None if keep == 32 else DasConfig(32, keep)))
+        r = train_eval_ppl(cfg, steps=STEPS)
+        rows.append({"name": f"fig11/das_Sa={keep}/32",
+                     "us_per_call": r["train_s"] * 1e6 / STEPS,
+                     "derived": f"ppl={r['ppl']:.2f}"})
+    for tl_sa in (16, 32, 56):
+        cfg = tiny_lm(f"tl{tl_sa}")
+        cfg = dataclasses.replace(cfg, lpsa=LpsaConfig(sink=8,
+                                                       window=tl_sa - 8,
+                                                       chunk=16))
+        r = train_eval_ppl(cfg, steps=STEPS)
+        rows.append({"name": f"fig11/tl_sa={tl_sa}",
+                     "us_per_call": r["train_s"] * 1e6 / STEPS,
+                     "derived": f"ppl={r['ppl']:.2f}"})
+    return rows

@@ -1,0 +1,93 @@
+"""Fig 12 — prefill/decode speedups.
+
+Two halves: (i) measured on this host — reduced BitNet served in naive-bf16
+vs int8-resident vs packed(TWD)+LPSA modes; (ii) modeled (perfmodel) —
+TENET-FPGA / TENET-ASIC / A100 over CPU at paper scale, reproducing the
+Fig-12 ordering (TENET-ASIC ~27.9x CPU, ~2.7x A100).
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import model as MD
+from repro.models.transformer import Runtime
+from repro.core import perfmodel as pm
+
+
+def _serve_once(cfg, rt, B=2, PRE=64, GEN=8, seed=0):
+    params = MD.init_params(jax.random.PRNGKey(seed), cfg)
+    sp = MD.export_serving(params, cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, PRE + GEN), 0,
+                              cfg.vocab)
+    prefill = jax.jit(lambda s, x: MD.prefill(s, cfg, x, rt, max_len=PRE + GEN))
+    decode = jax.jit(lambda s, c, tk, t: MD.decode_step(s, cfg, c, tk, t, rt))
+    lg, caches = prefill(sp, toks[:, :PRE])          # compile
+    jax.block_until_ready(lg)
+    t0 = time.perf_counter()
+    lg, caches = prefill(sp, toks[:, :PRE])
+    jax.block_until_ready(lg)
+    t_pre = time.perf_counter() - t0
+    lg, caches2 = decode(sp, caches, toks[:, PRE], jnp.array(PRE))  # compile
+    jax.block_until_ready(lg)
+    t0 = time.perf_counter()
+    c = caches
+    for i in range(GEN):
+        lg, c = decode(sp, c, toks[:, PRE + i], jnp.array(PRE + i))
+    jax.block_until_ready(lg)
+    t_dec = (time.perf_counter() - t0) / GEN
+    return t_pre * 1e6, t_dec * 1e6
+
+
+def run():
+    rows = []
+    base = reduced(get_config("bitnet-1.3b"))
+    modes = {
+        "naive-bf16": (dataclasses.replace(
+            base, ternary=dataclasses.replace(base.ternary, enabled=False,
+                                              das=None), lpsa=None),
+            Runtime(serve_sparse=False)),
+        "int8-resident": (dataclasses.replace(
+            base, ternary=dataclasses.replace(base.ternary, das=None,
+                                              serve_format="int8"),
+            lpsa=None), Runtime(serve_sparse=False)),
+        "twd+das+lpsa": (base, Runtime(serve_sparse=True)),
+    }
+    meas = {}
+    for name, (cfg, rt) in modes.items():
+        tp, td = _serve_once(cfg, rt)
+        meas[name] = (tp, td)
+        rows.append({"name": f"fig12/measured/{name}", "us_per_call": td,
+                     "derived": f"prefill_us={tp:.0f};decode_us={td:.0f}"})
+    b = meas["naive-bf16"]
+    t = meas["twd+das+lpsa"]
+    rows.append({"name": "fig12/measured/speedup", "us_per_call": 0.0,
+                 "derived": f"prefill={b[0]/t[0]:.2f}x;decode={b[1]/t[1]:.2f}x"})
+
+    # modeled at paper scale (BitNet-3B, 512/512 workload)
+    m = pm.LLAMA_3B
+    opt = pm.TenetOpt.full()
+    res = {
+        "cpu": pm.e2e(m, pm.CPU_I7, pm.TenetOpt.twd(), prefill_tl=512,
+                      decode_tokens=512),
+        "a100-naive": pm.e2e(m, pm.A100_NAIVE, pm.TenetOpt(weight_bits=16),
+                             prefill_tl=512, decode_tokens=512),
+        "a100-opt": pm.e2e(m, pm.A100_OPT, pm.TenetOpt(weight_bits=2),
+                           prefill_tl=512, decode_tokens=512),
+        "tenet-fpga": pm.e2e(m, pm.TENET_FPGA, opt, prefill_tl=512,
+                             decode_tokens=512),
+        "tenet-asic": pm.e2e(m, pm.TENET_ASIC, opt, prefill_tl=512,
+                             decode_tokens=512),
+    }
+    cpu_lat = res["cpu"].latency_s
+    for name, r in res.items():
+        rows.append({"name": f"fig12/model/{name}",
+                     "us_per_call": r.latency_s * 1e6,
+                     "derived": f"speedup_vs_cpu={cpu_lat/r.latency_s:.1f}x;"
+                                f"tok_s={r.tokens_per_s:.0f}"})
+    rows.append({"name": "fig12/model/asic_vs_a100opt", "us_per_call": 0.0,
+                 "derived": f"{res['a100-opt'].latency_s/res['tenet-asic'].latency_s:.2f}x"})
+    return rows

@@ -1,0 +1,30 @@
+"""Fig 14 — latency breakdown across optimization levels (modeled).
+
+TENET-ASIC naive(int8) -> +TWD -> +TWD+DAS -> +TWD+DAS+LPSA on
+Sparse-BitNet-1.3B; paper: TWD cuts ~45.6% of latency, DAS+LPSA a further
+~13.3%, total -40.5% vs A100-opt.
+"""
+from repro.core import perfmodel as pm
+
+
+def run():
+    m = pm.LLAMA_1B3
+    variants = [
+        ("naive-int8", pm.TenetOpt.naive_int8()),
+        ("+twd", pm.TenetOpt.twd()),
+        ("+twd+das", pm.TenetOpt.twd_das()),
+        ("+twd+das+lpsa", pm.TenetOpt.full()),
+    ]
+    rows = []
+    lat = {}
+    for name, opt in variants:
+        r = pm.e2e(m, pm.TENET_ASIC, opt, prefill_tl=512, decode_tokens=512)
+        lat[name] = r.latency_s
+        rows.append({"name": f"fig14/tenet-asic/{name}",
+                     "us_per_call": r.latency_s * 1e6,
+                     "derived": f"prefill_s={r.prefill_s:.4f};decode_s={r.decode_s:.4f}"})
+    twd_cut = 1 - lat["+twd"] / lat["naive-int8"]
+    rest_cut = 1 - lat["+twd+das+lpsa"] / lat["+twd"]
+    rows.append({"name": "fig14/reductions", "us_per_call": 0.0,
+                 "derived": f"twd_cut={twd_cut:.1%};das_lpsa_cut={rest_cut:.1%}"})
+    return rows

@@ -1,0 +1,60 @@
+"""Fig 7 — area/power proxy of the four A8W1.58 cores + measured microbench.
+
+Gate-level synthesis doesn't transfer to TPU (DESIGN.md §2); this bench
+(i) reproduces the paper's *relative* area/power ordering from the Table-I
+complexity model with weights calibrated so add-only is the 1.0 reference,
+and (ii) wall-clocks the software analogues on this host.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import twd
+from repro.core.stl import core_complexity, stl_matmul_ref
+from repro.kernels import ops
+
+# per-unit cost weights calibrated against the paper's 28nm synthesis
+# (Fig 7: STL -52% area / -46% power vs add-only; bitwise & base-3 LUT cores
+# save power but little area): full adders dominate, mux/lookup logic is
+# cheap, table registers sit in between.
+W_AREA = {"precompute": 1.0, "lookup": 0.04, "adder": 1.0}
+W_POWER = {"precompute": 1.0, "lookup": 0.10, "adder": 1.0}
+
+
+def _score(core, sa, w):
+    c = core_complexity(core, n_t=64, g_total=16, g=2, s_a=sa)
+    return sum(w[k] * v for k, v in c.items())
+
+
+def run():
+    rows = []
+    base_a = _score("add_only", 1.0, W_AREA)
+    base_p = _score("add_only", 1.0, W_POWER)
+    for core, sa in [("add_only", 1.0), ("general_lut", 1.0),
+                     ("ternary_lut", 1.0), ("stl", 1.0), ("stl", 0.5),
+                     ("stl", 0.25)]:
+        a = _score(core, sa, W_AREA) / base_a
+        p = _score(core, sa, W_POWER) / base_p
+        rows.append({"name": f"fig7/{core}@Sa={sa}", "us_per_call": 0.0,
+                     "derived": f"area_rel={a:.2f};power_rel={p:.2f}"})
+
+    # measured: dense f32 vs STL-route vs fused packed kernel (interpret)
+    rng = np.random.default_rng(0)
+    k, n, m = 640, 256, 8
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    wt = jnp.asarray(rng.integers(-1, 2, (k, n)), jnp.int8)
+    packed = jnp.asarray(twd.pack_ternary(wt))
+    f_dense = jax.jit(lambda a, b: a @ b)
+    f_stl = jax.jit(stl_matmul_ref)
+    t_dense = time_fn(f_dense, x, wt.astype(jnp.float32))
+    t_stl = time_fn(f_stl, x, wt)
+    f_pk = jax.jit(lambda a, p_: ops.ternary_gemm(a, p_, 1.0, mode="ref"))
+    t_pk = time_fn(f_pk, x, packed)
+    rows.append({"name": "fig7/measured_dense_f32", "us_per_call": t_dense,
+                 "derived": "host-cpu"})
+    rows.append({"name": "fig7/measured_stl_route", "us_per_call": t_stl,
+                 "derived": f"vs_dense={t_stl/t_dense:.2f}x"})
+    rows.append({"name": "fig7/measured_packed_gemm", "us_per_call": t_pk,
+                 "derived": f"vs_dense={t_pk/t_dense:.2f}x"})
+    return rows

@@ -1,0 +1,16 @@
+"""Table I — ternary compute-core complexity comparison (exact formulas)."""
+from repro.core.stl import core_complexity
+
+
+def run():
+    rows = []
+    kw = dict(n_t=64, g_total=16, g=2)
+    for core, sa in [("add_only", 1.0), ("general_lut", 1.0),
+                     ("ternary_lut", 1.0), ("stl", 1.0), ("stl", 0.5),
+                     ("stl", 0.25)]:
+        c = core_complexity(core, **kw, s_a=sa)
+        total = sum(c.values())
+        rows.append({"name": f"table1/{core}@Sa={sa}", "us_per_call": 0.0,
+                     "derived": f"pre={c['precompute']:.0f};look={c['lookup']:.0f};"
+                                f"add={c['adder']:.0f};total={total:.0f}"})
+    return rows

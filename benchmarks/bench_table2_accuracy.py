@@ -1,0 +1,28 @@
+"""Table II — Sparse BitNet vs BitNet vs FP LLaMA (tiny-scale replication).
+
+Trains four tiny LLaMA-family models on the synthetic corpus and reports
+held-out PPL.  Expected ordering (paper): FP <= ternary <= +DAS <= +DAS+LPSA,
+with small deltas — the qualitative claim "ternary + sparsity costs little".
+"""
+import os
+
+from benchmarks.common import tiny_lm, train_eval_ppl
+
+STEPS = int(os.environ.get("BENCH_STEPS", "200"))
+
+
+def run():
+    rows = []
+    variants = [
+        ("fp-llama", dict(ternary=False, das=False, lpsa=False)),
+        ("bitnet", dict(ternary=True, das=False, lpsa=False)),
+        ("bitnet+das", dict(ternary=True, das=True, lpsa=False)),
+        ("bitnet+das+lpsa", dict(ternary=True, das=True, lpsa=True)),
+    ]
+    for name, kw in variants:
+        cfg = tiny_lm(name, **kw)
+        r = train_eval_ppl(cfg, steps=STEPS)
+        rows.append({"name": f"table2/{name}",
+                     "us_per_call": r["train_s"] * 1e6 / STEPS,
+                     "derived": f"ppl={r['ppl']:.2f};loss={r['final_loss']:.3f}"})
+    return rows

@@ -1,0 +1,31 @@
+"""Table III — GLA + TQ + DAS (tiny-scale replication, paper Sec. V-D)."""
+import dataclasses
+import os
+
+from benchmarks.common import train_eval_ppl
+from repro.configs import get_config, reduced
+from repro.configs.base import DasConfig
+
+STEPS = int(os.environ.get("BENCH_STEPS", "200"))
+
+
+def run():
+    base = reduced(get_config("gla-1.3b"), d_model=128)
+    rows = []
+    variants = [
+        ("gla-fp", dataclasses.replace(
+            base, ternary=dataclasses.replace(base.ternary, enabled=False,
+                                              das=None))),
+        ("gla+tq", dataclasses.replace(
+            base, ternary=dataclasses.replace(base.ternary, enabled=True,
+                                              das=None))),
+        ("gla+tq+das", dataclasses.replace(
+            base, ternary=dataclasses.replace(base.ternary, enabled=True,
+                                              das=DasConfig(32, 16)))),
+    ]
+    for name, cfg in variants:
+        r = train_eval_ppl(cfg, steps=STEPS)
+        rows.append({"name": f"table3/{name}",
+                     "us_per_call": r["train_s"] * 1e6 / STEPS,
+                     "derived": f"ppl={r['ppl']:.2f};loss={r['final_loss']:.3f}"})
+    return rows

@@ -1,0 +1,24 @@
+"""Table IV / Sec. IV-D — DSE grid search; paper picks P_L=16, P_H=4,
+TL_SA=1024 for TENET-ASIC under L = PPL * power * latency."""
+from repro.core import dse, perfmodel as pm
+
+
+def run():
+    rows = []
+    cands = dse.dse_grid_search(pm.LLAMA_3B, "bitnet-3b")
+    for i, c in enumerate(cands[:5]):
+        rows.append({"name": f"table4/rank{i}", "us_per_call": c.latency_s * 1e6,
+                     "derived": f"P_L={c.p_l};P_H={c.p_h};TL_SA={c.tl_sa};"
+                                f"S_a={c.s_a};ppl={c.ppl:.2f};"
+                                f"power_w={c.power_w:.2f};obj={c.objective:.3e}"})
+    best = cands[0]
+    rows.append({"name": "table4/paper_point", "us_per_call": 0.0,
+                 "derived": f"best=({best.p_l},{best.p_h},{best.tl_sa});"
+                            f"paper=(16,4,1024)"})
+    # TPU-facing variant: pack size / TL_SA / S_a balance (DESIGN.md §2)
+    tcands = dse.tpu_dse_grid_search(pm.LLAMA_3B, "bitnet-3b", pm.TPU_V5E)
+    t = tcands[0]
+    rows.append({"name": "table4/tpu_variant", "us_per_call": 0.0,
+                 "derived": f"chunk={t['chunk']};tl_sa={t['tl_sa']};"
+                            f"s_a={t['s_a']};hidden={t['hidden']}"})
+    return rows

@@ -1,0 +1,82 @@
+"""Shared benchmark helpers: timing + tiny-model training harness."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (DasConfig, LpsaConfig, ModelConfig,
+                                TernaryConfig)
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as MD
+from repro.models.transformer import Runtime
+from repro.optim import adamw, schedule
+
+RT = Runtime()
+
+
+def time_fn(fn, *args, iters=5, warmup=2) -> float:
+    """Median wall-time per call in microseconds (jit'd fn)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def tiny_lm(name="tiny", *, ternary=True, das=True, lpsa=True,
+            d_model=128, n_layers=4, vocab=512, window=24, sink=8) -> ModelConfig:
+    return ModelConfig(
+        name=name, family="dense", n_layers=n_layers, d_model=d_model,
+        n_heads=4, n_kv_heads=2, head_dim=32, d_ff=d_model * 4, vocab=vocab,
+        ternary=TernaryConfig(enabled=ternary,
+                              das=DasConfig(32, 16) if das else None),
+        lpsa=LpsaConfig(sink=sink, window=window, chunk=16) if lpsa else None,
+        dtype="float32", remat=False, scan_layers=False,
+    )
+
+
+def train_eval_ppl(cfg: ModelConfig, *, steps=250, batch=8, seq=64, lr=1e-2,
+                   seed=0, eval_batches=4) -> dict:
+    """Train on SyntheticLM, return final train loss + held-out PPL."""
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=seq, batch=batch, seed=seed)
+    heldout = SyntheticLM(vocab=cfg.vocab, seq_len=seq, batch=batch,
+                          seed=seed + 999)
+    params = MD.init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adamw.adamw_init(params)
+
+    @jax.jit
+    def step_fn(p, o, b):
+        (loss, _), g = jax.value_and_grad(
+            lambda pp: MD.loss_fn(pp, cfg, b, RT), has_aux=True)(p)
+        lr_t = schedule.cosine_schedule(o.step, peak_lr=lr, warmup=20,
+                                        total=steps)
+        p, o, _ = adamw.adamw_step(p, g, o, lr=lr_t)
+        return p, o, loss
+
+    t0 = time.perf_counter()
+    first = last = None
+    for s in range(steps):
+        b = jax.tree.map(jnp.asarray, data.batch_at(s))
+        params, opt, loss = step_fn(params, opt, b)
+        if s == 0:
+            first = float(loss)
+        last = float(loss)
+    train_s = time.perf_counter() - t0
+
+    @jax.jit
+    def eval_fn(p, b):
+        return MD.loss_fn(p, cfg, b, RT)[0]
+
+    nll = float(np.mean([float(eval_fn(params,
+                                       jax.tree.map(jnp.asarray,
+                                                    heldout.batch_at(i))))
+                         for i in range(eval_batches)]))
+    return {"first_loss": first, "final_loss": last, "eval_nll": nll,
+            "ppl": float(np.exp(nll)), "train_s": train_s}

@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  BENCH_STEPS env var scales the
+training-based benches (Tables II/III, Fig 11).
+"""
+import sys
+import time
+
+MODULES = [
+    "bench_table1_complexity",
+    "bench_fig7_cores",
+    "bench_fig1_ipj",
+    "bench_fig12_speedup",
+    "bench_fig14_breakdown",
+    "bench_fig15_memory",
+    "bench_table4_dse",
+    "bench_fig17_sota",
+    "bench_table2_accuracy",
+    "bench_table3_gla",
+    "bench_fig11_ablation",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name in MODULES:
+        if only and not any(o in name for o in only):
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        for row in mod.run():
+            print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

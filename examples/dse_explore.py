@@ -1,0 +1,17 @@
+"""Run the paper's Design Space Exploration (Sec. IV-D) + the TPU variant.
+
+Run:  PYTHONPATH=src python examples/dse_explore.py
+"""
+from repro.core import dse, perfmodel as pm
+
+print("== TENET-ASIC DSE (Eq. 4: PPL x power x latency, s.t. Eq. 7) ==")
+for c in dse.dse_grid_search(pm.LLAMA_3B, "bitnet-3b")[:5]:
+    print(f"  P_L={c.p_l:2d} P_H={c.p_h} TL_SA={c.tl_sa:4d} S_a={c.s_a:.2f} "
+          f"ppl={c.ppl:5.2f} power={c.power_w:5.2f}W "
+          f"lat={c.latency_s*1e3:6.2f}ms obj={c.objective:.3e}")
+
+print("\n== TPU v5e variant: (pack C, TL_SA, S_a) roofline balance ==")
+for r in dse.tpu_dse_grid_search(pm.LLAMA_3B, "bitnet-3b", pm.TPU_V5E)[:5]:
+    print(f"  C={r['chunk']:3d} TL_SA={r['tl_sa']:4d} S_a={r['s_a']:.1f} "
+          f"t_proj={r['t_proj']*1e6:6.1f}us t_attn={r['t_attn']*1e6:6.1f}us "
+          f"attention-hidden={r['hidden']}")

@@ -1,0 +1,77 @@
+"""End-to-end driver: serve a ~110M-parameter Sparse-BitNet on CPU.
+
+Builds the model, exports TWD-packed serving weights, prefills a batch of
+requests through the LPSA streaming dataflow and generates tokens greedily
+from the O(TL_SA) ring caches — the paper's full serving path, minus the
+accelerator.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--gen 16]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DasConfig, LpsaConfig, ModelConfig, TernaryConfig
+from repro.models import model as MD
+from repro.models.transformer import Runtime
+
+CFG_100M = ModelConfig(
+    name="sparse-bitnet-110m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab=32_000,
+    ternary=TernaryConfig(das=DasConfig(32, 16)),
+    lpsa=LpsaConfig(sink=32, window=224, chunk=64),
+    dtype="float32", remat=False, scan_layers=False,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    cfg = CFG_100M
+    rt = Runtime()
+
+    params = MD.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    sparams = MD.export_serving(params, cfg)
+    nb = sum(x.nbytes for x in jax.tree.leaves(sparams))
+    print(f"[serve] {cfg.name}: {n/1e6:.0f}M params -> {nb/2**20:.0f} MiB "
+          f"packed serving weights")
+
+    prefill = jax.jit(lambda s, x: MD.prefill(
+        s, cfg, x, rt, max_len=args.prompt_len + args.gen))
+    decode = jax.jit(lambda s, c, tk, t: MD.decode_step(s, cfg, c, tk, t, rt))
+
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (args.batch, args.prompt_len), 0, cfg.vocab)
+    t0 = time.perf_counter()
+    logits, caches = prefill(sparams, toks)
+    jax.block_until_ready(logits)
+    t_pre = time.perf_counter() - t0
+    print(f"[serve] prefill {args.batch}x{args.prompt_len}: {t_pre:.2f}s "
+          f"({args.batch*args.prompt_len/t_pre:.0f} tok/s)")
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, caches = decode(sparams, caches, tok,
+                                jnp.array(args.prompt_len + i))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.perf_counter() - t0
+    print(f"[serve] decode {args.gen-1} x {args.batch}: {t_dec:.2f}s "
+          f"({(args.gen-1)*args.batch/t_dec:.1f} tok/s)")
+    print(f"[serve] sample continuation ids: "
+          f"{np.asarray(jnp.stack(out,1))[0][:12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Train a Sparse-BitNet with the paper's QAT recipe (STE ternary + DAS),
+with fault-tolerant checkpointing — kill and restart freely.
+
+Run:  PYTHONPATH=src python examples/train_ternary_qat.py
+"""
+from repro.launch import train
+
+train.main([
+    "--arch", "bitnet-1.3b", "--reduced",
+    "--steps", "60", "--batch", "8", "--seq", "64",
+    "--ckpt-dir", "/tmp/tenet_qat_ckpt", "--ckpt-every", "20",
+    "--inject-failure", "31",       # survive a simulated node loss
+    "--log-every", "20",
+])

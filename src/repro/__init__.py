@@ -1,0 +1,6 @@
+"""repro — TENET (sparsity-aware LUT-centric ternary LLM inference) on TPU.
+
+Layers: core/ (paper's algorithms) -> kernels/ (Pallas) -> models/ (zoo)
+-> distributed/ + optim/ + data/ + checkpoint/ (substrate) -> launch/.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,2 @@
+"""Sharded checkpointing with resharding restore."""
+from .ckpt import latest_step, restore_checkpoint, save_checkpoint, wait_pending  # noqa: F401

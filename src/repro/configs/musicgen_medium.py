@@ -1,0 +1,14 @@
+"""MusicGen-medium [arXiv:2306.05284] — decoder-only over EnCodec tokens.
+
+Backbone only per the brief: the EnCodec frontend is a stub; input_specs()
+supplies precomputed frame embeddings. Cross-attention conditioning omitted
+(backbone spec lists self-attention dims only) — noted in DESIGN.md.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium", family="audio",
+    n_layers=48, d_model=1536, n_heads=24, n_kv_heads=24, head_dim=64,
+    d_ff=6144, vocab=2048, act="gelu", ffn_kind="mlp",
+    frontend="audio_frames", tie_embeddings=False,
+)

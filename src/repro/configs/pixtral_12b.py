@@ -1,0 +1,13 @@
+"""Pixtral-12B [hf:mistralai/Pixtral-12B-2409] — ViT frontend + nemo decoder.
+
+Backbone only per the brief: the Pixtral-ViT is a stub; input_specs()
+supplies precomputed patch embeddings interleaved with text embeddings.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=160,
+    d_ff=14_336, vocab=131_072, rope_theta=1_000_000.0,
+    frontend="vision_patches", tie_embeddings=False,
+)

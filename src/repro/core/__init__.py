@@ -1,0 +1,13 @@
+"""repro.core — the paper's contributions as composable JAX modules.
+
+  ternary  : Q_1.58 / Q_int8 quantizers + STE training path
+  twd      : base-3 5-trits/byte weight compression + LUT decode
+  das      : dynamic activation N:M sparsity (TopK per block)
+  stl      : STL-core LUT semantics oracle + Table-I complexity model
+  lpsa     : linear-projection-aware sparse attention dataflow
+  ipj      : intelligence-per-joule metric
+  perfmodel: analytic roofline/power model (paper HW + TPU)
+  dse      : design-space exploration (Eq. 4-7)
+"""
+
+from . import das, dse, ipj, lpsa, perfmodel, stl, ternary, twd  # noqa: F401

@@ -1,0 +1,222 @@
+"""LPSA — Linear-Projection-aware Sparse Attention dataflow (paper Sec. IV-B).
+
+The paper's Algorithm 1: the sequence is split into N packs of C tokens; per
+pack, the ternary QKV projections produce K/Q/V which are *immediately*
+consumed by sparse attention (attention sink + local window, StreamingLLM
+pattern), so attention intermediates never travel to DRAM.  Only the sink KV
+(s fixed tokens at sequence start) and a rolling window KV (last w tokens)
+stay resident on chip.  TL_SA = s + w valid KV pairs per query row.
+
+TPU mapping: "on-chip KV buffer" = carried scan state that XLA keeps in HBM
+but whose *attention working set* per pack is O(C·(s+w)) in VMEM — the same
+asymptotic traffic win (sequence activations are read once, attention scores
+never materialize globally).  The pack loop is a `lax.scan`, the projections
+are the caller-supplied ternary ops (so DAS/TWD compose), and the per-pack
+attention is a masked flash-style softmax (Pallas kernel in kernels/ for the
+hot path; this file is the exact oracle + dataflow).
+
+Semantics (position p_q attends p_k)  <=>  p_k <= p_q  AND
+                                           (p_k < sink  OR  p_q - p_k < window)
+(i.e. `window` counts the current token: TL_SA = sink + window slots exactly,
+so the decode ring never evicts a still-visible key).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "LpsaSpec",
+    "lpsa_allowed",
+    "lpsa_mask",
+    "masked_attention_ref",
+    "lpsa_prefill",
+    "decode_slot",
+    "lpsa_decode_attend",
+]
+
+NEG_INF = -1e30
+
+
+class LpsaSpec(NamedTuple):
+    sink: int = 128      # attention-sink tokens kept from sequence start
+    window: int = 896    # local window (TL_SA = sink + window = 1024, paper)
+    chunk: int = 256     # pack size C
+
+    @property
+    def tl_sa(self) -> int:
+        return self.sink + self.window
+
+
+def lpsa_allowed(q_pos: jax.Array, k_pos: jax.Array, sink: int, window: int) -> jax.Array:
+    """Boolean attend-permission for broadcastable position arrays."""
+    causal = k_pos <= q_pos
+    keep = (k_pos < sink) | (q_pos - k_pos < window)
+    return causal & keep
+
+
+def lpsa_mask(tl: int, sink: int, window: int) -> jax.Array:
+    """Dense (TL, TL) mask — the oracle pattern (diagonal band + sink column)."""
+    pos = jnp.arange(tl)
+    return lpsa_allowed(pos[:, None], pos[None, :], sink, window)
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, L, Hkv, D) -> (B, L, Hkv*n_rep, D) for GQA."""
+    if n_rep == 1:
+        return x
+    b, l, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, l, h, n_rep, d)).reshape(b, l, h * n_rep, d)
+
+
+def _softmax_attend(q, k, v, mask, *, softcap: float | None = None,
+                    scale: float | None = None) -> jax.Array:
+    """Masked attention oracle.  q:(B,Lq,H,D) k,v:(B,Lk,H,D) mask:(…,Lq,Lk)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (can't happen for causal q>=0, but keep it safe)
+    p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v).astype(q.dtype)
+
+
+def masked_attention_ref(q, k, v, *, sink: int, window: int,
+                         softcap: float | None = None) -> jax.Array:
+    """Quadratic LPSA oracle over full sequences (used for training & tests).
+
+    q: (B, L, Hq, D); k, v: (B, L, Hkv, D) with Hq % Hkv == 0.
+    """
+    b, l, hq, d = q.shape
+    hkv = k.shape[2]
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    mask = lpsa_mask(l, sink, window)[None, None]  # (1,1,L,L)
+    return _softmax_attend(q, k, v, mask, softcap=softcap)
+
+
+# ---------------------------------------------------------------------------
+# Streaming prefill (Algorithm 1): scan over token packs
+# ---------------------------------------------------------------------------
+
+def lpsa_prefill(
+    x: jax.Array,
+    qkv_proj: Callable[[jax.Array], tuple[jax.Array, jax.Array, jax.Array]],
+    *,
+    spec: LpsaSpec,
+    num_q_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope: Callable[[jax.Array, jax.Array], jax.Array] | None = None,
+    softcap: float | None = None,
+    attend_fn: Callable | None = None,
+    return_state: bool = False,
+):
+    """Pack-chunked fused projection + sparse attention (prefilling stage).
+
+    x: (B, TL, Dm) hidden states.  qkv_proj maps an (B, C, Dm) pack to
+    (q, k, v) already head-split: q (B,C,Hq,D), k/v (B,C,Hkv,D) — the ternary
+    STL path lives inside the callable so DAS/TWD compose.  ``rope(x, pos)``
+    applies positional rotation given absolute positions.
+
+    Returns attention output (B, TL, Hq, D) — exactly equal to
+    :func:`masked_attention_ref` on the same projections.
+    """
+    b, tl, _ = x.shape
+    s, w, c = spec.sink, spec.window, spec.chunk
+    if tl % c != 0:
+        raise ValueError(f"TL={tl} must be divisible by the pack size C={c}")
+    n_packs = tl // c
+    n_rep = num_q_heads // num_kv_heads
+    kvshape = lambda L: (b, L, num_kv_heads, head_dim)  # noqa: E731
+
+    packs = x.reshape(b, n_packs, c, -1).swapaxes(0, 1)  # (N, B, C, Dm)
+
+    def step(carry, pack):
+        k_sink, v_sink, k_win, v_win, t0 = carry
+        q, k, v = qkv_proj(pack)                     # STL cores (paper line 7/9/12)
+        pos = t0 + jnp.arange(c)
+        if rope is not None:
+            q = rope(q, pos)
+            k = rope(k, pos)
+
+        # ---- update sink buffer (positions [0, s)) -------------------------
+        slot = jnp.arange(s)
+        take = (slot >= t0) & (slot < t0 + c)
+        src = jnp.clip(slot - t0, 0, c - 1)
+        tk = jnp.where(take[None, :, None, None], jnp.take(k, src, axis=1), k_sink)
+        tv = jnp.where(take[None, :, None, None], jnp.take(v, src, axis=1), v_sink)
+
+        # ---- assemble keys: [sink | window | current pack] -----------------
+        win_pos = t0 - w + jnp.arange(w)             # may be negative => invalid
+        k_all = jnp.concatenate([tk, k_win, k], axis=1)
+        v_all = jnp.concatenate([tv, v_win, v], axis=1)
+        k_pos = jnp.concatenate([jnp.arange(s), win_pos, pos])
+        q_pos = pos
+
+        # validity: a sink slot participates only once it belongs to a *prior*
+        # pack (the current pack's own tokens go through the pack branch);
+        # window slot valid iff pos >= s (dedupe vs sink) and >= 0.
+        sink_valid = jnp.arange(s) < t0
+        win_valid = (win_pos >= s) & (win_pos >= 0)
+        pack_valid = jnp.ones((c,), dtype=bool)
+        valid = jnp.concatenate([sink_valid, win_valid, pack_valid])
+
+        mask = lpsa_allowed(q_pos[:, None], k_pos[None, :], s, w) & valid[None, :]
+        kr = _repeat_kv(k_all, n_rep)
+        vr = _repeat_kv(v_all, n_rep)
+        attend = attend_fn if attend_fn is not None else _softmax_attend
+        o = attend(q, kr, vr, mask[None, None], softcap=softcap)
+
+        # ---- roll window buffer with the pack's trailing tokens ------------
+        if c >= w:
+            nk_win, nv_win = k[:, c - w:], v[:, c - w:]
+        else:
+            nk_win = jnp.concatenate([k_win[:, c:], k], axis=1)
+            nv_win = jnp.concatenate([v_win[:, c:], v], axis=1)
+        return (tk, tv, nk_win, nv_win, t0 + c), o
+
+    init = (
+        jnp.zeros(kvshape(s), x.dtype), jnp.zeros(kvshape(s), x.dtype),
+        jnp.zeros(kvshape(w), x.dtype), jnp.zeros(kvshape(w), x.dtype),
+        jnp.array(0, jnp.int32),
+    )
+    state, outs = jax.lax.scan(step, init, packs)    # (N, B, C, Hq, D)
+    y = outs.swapaxes(0, 1).reshape(b, tl, num_q_heads, head_dim)
+    if return_state:
+        return y, state
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode: ring-buffered sink+window KV cache (O(TL_SA) memory at any length)
+# ---------------------------------------------------------------------------
+
+def decode_slot(pos: jax.Array, sink: int, window: int) -> jax.Array:
+    """Cache slot for absolute position: sink slots are pinned, the window is
+    a ring.  Slot layout: [0..sink) sink, [sink..sink+window) ring."""
+    return jnp.where(pos < sink, pos, sink + (pos - sink) % window)
+
+
+def lpsa_decode_attend(q, k_cache, v_cache, pos_cache, q_pos, *,
+                       sink: int, window: int, softcap: float | None = None) -> jax.Array:
+    """One-token sparse attention against the ring cache.
+
+    q: (B, 1, Hq, D); caches: (B, sink+window, Hkv, D); pos_cache: (B, S+W)
+    holding the absolute position stored in each slot (-1 = empty).  The new
+    token's K/V must already be written to its slot (models/kvcache.py).
+    """
+    hq, hkv = q.shape[2], k_cache.shape[2]
+    kr = _repeat_kv(k_cache, hq // hkv)
+    vr = _repeat_kv(v_cache, hq // hkv)
+    valid = pos_cache >= 0
+    mask = lpsa_allowed(q_pos[:, None, None], pos_cache[:, None, :], sink, window)
+    mask = (mask & valid[:, None, :])[:, None]       # (B,1,1,S+W) -> bhqk
+    return _softmax_attend(q, kr, vr, mask, softcap=softcap)

@@ -1,0 +1,158 @@
+"""Ternary (1.58-bit) quantization — the substrate of BitNet-style linears.
+
+Implements the paper's quantization functions (Sec. III-C, Eq. 1):
+
+  * ``Q_1.58(W)``  — absmean ternary weight quantization: W -> {-1, 0, +1} * scale,
+    with the BitNet b1.58 rule  W_t = round_clip(W / mean(|W|), -1, 1).
+  * ``Q_int8(X)``  — per-token absmax int8 activation quantization.
+  * Straight-through estimators (STE) for both, so Sparse-BitNet models can be
+    trained / fine-tuned exactly as the paper does ("sparsify-then-quantize").
+
+All functions are pure JAX and shard transparently under pjit/shard_map.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "TernaryWeight",
+    "absmean_scale",
+    "ternary_quantize",
+    "ternary_dequantize",
+    "ternary_fake_quant",
+    "ternary_fake_quant_stacked",
+    "int8_quantize",
+    "int8_dequantize",
+    "int8_fake_quant",
+    "QuantizedActivation",
+]
+
+EPS = 1e-6
+
+
+class TernaryWeight(NamedTuple):
+    """A ternary-quantized weight: int8 values in {-1, 0, +1} plus a scale.
+
+    ``values`` has the original weight shape; ``scale`` broadcasts against it
+    (per-tensor by default, per-output-channel optionally).
+    """
+
+    values: jax.Array  # int8, in {-1, 0, 1}
+    scale: jax.Array   # f32, broadcastable to ``values``
+
+
+class QuantizedActivation(NamedTuple):
+    values: jax.Array  # int8
+    scale: jax.Array   # f32 per-token (…, 1)
+
+
+def absmean_scale(w: jax.Array, *, per_channel: bool = False) -> jax.Array:
+    """BitNet-b1.58 scale: gamma = mean(|W|) (per tensor or per output column)."""
+    if per_channel:
+        # weights are (in, out): scale per output channel
+        return jnp.mean(jnp.abs(w), axis=tuple(range(w.ndim - 1)), keepdims=True) + EPS
+    return jnp.mean(jnp.abs(w)) + EPS
+
+
+def ternary_quantize(w: jax.Array, *, per_channel: bool = False) -> TernaryWeight:
+    """W -> TernaryWeight with values = round_clip(W/gamma, -1, 1)."""
+    gamma = absmean_scale(w, per_channel=per_channel)
+    q = jnp.clip(jnp.round(w / gamma), -1.0, 1.0)
+    return TernaryWeight(values=q.astype(jnp.int8), scale=gamma.astype(jnp.float32))
+
+
+def ternary_dequantize(tw: TernaryWeight, dtype=jnp.float32) -> jax.Array:
+    return tw.values.astype(dtype) * tw.scale.astype(dtype)
+
+
+@jax.custom_vjp
+def ternary_fake_quant(w: jax.Array) -> jax.Array:
+    """Differentiable (STE) ternary fake-quant used during QAT / fine-tuning.
+
+    Forward: dequantize(quantize(w)).  Backward: identity (straight-through).
+    """
+    tw = ternary_quantize(w)
+    return ternary_dequantize(tw, dtype=w.dtype)
+
+
+def _tfq_fwd(w):
+    return ternary_fake_quant(w), None
+
+
+def _tfq_bwd(_, g):
+    return (g,)
+
+
+ternary_fake_quant.defvjp(_tfq_fwd, _tfq_bwd)
+
+
+def int8_quantize(x: jax.Array, *, axis: int = -1) -> QuantizedActivation:
+    """Per-token absmax int8 quantization of activations (paper's Q_int8)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = (amax / 127.0 + EPS).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return QuantizedActivation(values=q, scale=scale)
+
+
+def int8_dequantize(qa: QuantizedActivation, dtype=jnp.float32) -> jax.Array:
+    return qa.values.astype(dtype) * qa.scale.astype(dtype)
+
+
+@jax.custom_vjp
+def int8_fake_quant(x: jax.Array) -> jax.Array:
+    qa = int8_quantize(x)
+    return int8_dequantize(qa, dtype=x.dtype)
+
+
+def _i8fq_fwd(x):
+    return int8_fake_quant(x), None
+
+
+def _i8fq_bwd(_, g):
+    return (g,)
+
+
+int8_fake_quant.defvjp(_i8fq_fwd, _i8fq_bwd)
+
+
+@jax.custom_vjp
+def ternary_fake_quant_stacked(w: jax.Array) -> jax.Array:
+    """STE fake-quant with a per-leading-axis (per-expert) absmean scale.
+
+    Shard-invariant under expert parallelism: each expert's scale depends
+    only on its own slab, so local computation inside shard_map equals the
+    global computation exactly (a per-tensor scale would differ per shard).
+    """
+    axes = tuple(range(1, w.ndim))
+    gamma = jnp.mean(jnp.abs(w), axis=axes, keepdims=True) + EPS
+    q = jnp.clip(jnp.round(w / gamma), -1.0, 1.0)
+    return (q * gamma).astype(w.dtype)
+
+
+def _tfqs_fwd(w):
+    return ternary_fake_quant_stacked(w), None
+
+
+def _tfqs_bwd(_, g):
+    return (g,)
+
+
+ternary_fake_quant_stacked.defvjp(_tfqs_fwd, _tfqs_bwd)
+
+
+@partial(jax.jit, static_argnames=("out_dtype",))
+def ternary_matmul_ref(x: jax.Array, tw_values: jax.Array, tw_scale: jax.Array,
+                       out_dtype=jnp.float32) -> jax.Array:
+    """Reference ternary mpGEMM: int8/f32 activation x {-1,0,1} weight.
+
+    Computes x @ (values * scale).  The MXU-friendly formulation keeps the
+    matmul in the input dtype (int8 inputs use int32 accumulation upstream in
+    kernels/); this reference stays in float for clarity.
+    """
+    w = tw_values.astype(out_dtype) * tw_scale.astype(out_dtype)
+    return jnp.matmul(x.astype(out_dtype), w)

@@ -1,0 +1,2 @@
+"""Deterministic sharded data pipelines (synthetic + file-backed)."""
+from . import pipeline  # noqa: F401

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, collectives, PP, fault tolerance."""
+from . import collectives, elastic, fault, pipeline, sharding  # noqa: F401

@@ -1,0 +1,52 @@
+"""Collective helpers: compressed gradient exchange + overlap utilities.
+
+The cross-pod (DCN) gradient reduction is the slowest collective at 1000+
+node scale; `compressed_psum` trades it down 4x by shipping int8 + per-shard
+scales (with error feedback held by the caller so quantization noise is
+unbiased over steps — the standard 1-bit-Adam/PowerSGD recipe at int8).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_compress", "int8_decompress", "compressed_psum",
+           "psum_scatter_mean"]
+
+
+def int8_compress(x: jax.Array):
+    """-> (q int8, scale f32 scalar) with absmax scaling."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = (amax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return q.astype(dtype) * scale.astype(dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, error: jax.Array):
+    """int8-compressed all-reduce with error feedback.
+
+    Inside shard_map/pmap: each shard quantizes (x + error) to int8, the
+    *wire tensor is int8* (all_gather), shards dequantize-and-sum locally.
+    Returns (summed f32, new_error).  Collective bytes: N vs 4N for f32
+    ring all-reduce halves (~4x with P large).
+    """
+    target = x + error
+    q, scale = int8_compress(target)
+    new_error = target - int8_decompress(q, scale, x.dtype)
+    qg = jax.lax.all_gather(q, axis_name)          # (P, ...) int8 on the wire
+    sg = jax.lax.all_gather(scale, axis_name)      # (P,) f32
+    summed = jnp.tensordot(sg.astype(jnp.float32),
+                           qg.astype(jnp.float32), axes=1)
+    return summed.astype(x.dtype), new_error
+
+
+def psum_scatter_mean(x: jax.Array, axis_name: str):
+    """reduce-scatter mean along axis 0 (the ZeRO-1 gradient exchange)."""
+    n = jax.lax.axis_size(axis_name)
+    return jax.lax.psum_scatter(x, axis_name, scatter_dimension=0,
+                                tiled=True) / n

@@ -1,0 +1,32 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+Checkpoints store logically-global arrays, so growing/shrinking the job
+(node loss without replacement, or scale-up) is a restore with the new
+mesh's NamedShardings.  `plan_remesh` picks the largest valid mesh for a
+surviving device count (keeps the model axis intact first — TP degree is a
+correctness-of-fit constraint, DP is free to shrink).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.checkpoint.ckpt import restore_checkpoint
+
+__all__ = ["plan_remesh", "elastic_restore"]
+
+
+def plan_remesh(n_devices: int, *, model: int = 16,
+                axis_names=("data", "model")) -> tuple[tuple[int, int], tuple]:
+    """Largest (data, model) mesh fitting n_devices, preserving TP degree."""
+    while model > 1 and n_devices % model:
+        model //= 2
+    data = max(1, n_devices // model)
+    return (data, model), axis_names
+
+
+def elastic_restore(directory: str, mesh, specs: Any, step: int | None = None):
+    """Resharding restore onto `mesh` — the elastic entry point."""
+    return restore_checkpoint(directory, step, mesh=mesh, specs=specs)

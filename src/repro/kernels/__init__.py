@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  ternary_gemm : fused TWD(base-3) decode + ternary mpGEMM (STL analogue)
+  das_gemm     : DAS block-compacted sparse GEMV (butterfly -> scatter)
+  sparse_attn  : LPSA sink+window flash attention
+  topk_mask    : DAS ASM bitmask generator
+
+ops.py = jit'd dispatch wrappers (pallas on TPU, jnp ref elsewhere);
+ref.py = pure-jnp oracles the kernels are verified against.
+"""

@@ -1,0 +1,91 @@
+"""Pallas kernel: DAS block-sparse ternary GEMV (paper Sec. III-C/D).
+
+The STL core consumes *compacted* activations — per 32-lane block only the
+Top-K survive — and a butterfly router steers the matching weight channels.
+On TPU the router becomes a block-local one-hot **scatter**: the compacted
+values are expanded back to their dense lane positions inside VMEM (a VPU
+one-hot matmul over a 32-wide block, negligible next to the MXU dot), then a
+dense slab dot runs on the MXU.  HBM sees only the compacted activations
+(S_a x fewer bytes) — the bandwidth side of DAS — while the FLOP saving of
+the butterfly does not transfer to a dense systolic array (DESIGN.md §2).
+
+GEMV-shaped on purpose: the paper's STL core "is optimized for GEMV" (decode
+stage of one-batch inference); batch rows are vmapped by the wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+K_TILE = 512          # dense lanes per K tile
+BLOCK = 32            # DAS block size B_s
+
+
+def _das_gemv_kernel(vals_ref, idx_ref, w_ref, wscale_ref, out_ref, *,
+                     n_k: int, keep: int):
+    """grid = (N/bn, K/K_TILE); one token.
+
+    vals/idx: (1, bkc) compacted activation slab (bkc = K_TILE*keep/BLOCK),
+    w: (K_TILE, bn) int8 trits, out: (1, bn) f32.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[...].astype(jnp.float32)       # (1, bkc)
+    local = idx_ref[...] - k * K_TILE              # absolute -> tile-local
+    # scatter to dense lanes: onehot (bkc, K_TILE) — the "butterfly router"
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (local.shape[1], K_TILE), 1)
+    onehot = (local[0, :, None] == lanes).astype(jnp.float32)
+    dense = jax.lax.dot(vals, onehot,
+                        preferred_element_type=jnp.float32)   # (1, K_TILE)
+    w = w_ref[...].astype(jnp.float32)
+    out_ref[...] += jax.lax.dot(dense, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finalize():
+        out_ref[...] = out_ref[...] * wscale_ref[0, 0]
+
+
+def das_gemv(values: jax.Array, indices: jax.Array, w_trits: jax.Array,
+             w_scale: jax.Array, *, keep: int = BLOCK // 2,
+             block_n: int = 256, interpret: bool = False) -> jax.Array:
+    """(Kc,) compacted values/indices  x  (K, N) trits  ->  (N,) f32.
+
+    Kc = K * keep / BLOCK; indices must be block-sorted ascending (the
+    output of core.das.das_compact).
+    """
+    (kc,) = values.shape
+    kdim, n = w_trits.shape
+    if kc * BLOCK != kdim * keep:
+        raise ValueError(f"Kc={kc} inconsistent with K={kdim}, keep={keep}")
+    if kdim % K_TILE:
+        raise ValueError(f"K={kdim} must be a multiple of {K_TILE}")
+    bkc = K_TILE * keep // BLOCK
+    bn = min(block_n, n)
+    if n % bn:
+        raise ValueError(f"N={n} not tileable by {bn}")
+    n_k = kdim // K_TILE
+
+    kernel = functools.partial(_das_gemv_kernel, n_k=n_k, keep=keep)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bkc), lambda j, k: (0, k)),
+            pl.BlockSpec((1, bkc), lambda j, k: (0, k)),
+            pl.BlockSpec((K_TILE, bn), lambda j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(values[None, :], indices[None, :].astype(jnp.int32), w_trits,
+      jnp.asarray(w_scale, jnp.float32).reshape(1, 1))
+    return out[0]

@@ -1,0 +1,106 @@
+"""jit'd public wrappers around the Pallas kernels with XLA fallbacks.
+
+Dispatch policy: Pallas on TPU backends, pure-jnp reference elsewhere
+(`interpret=True` forces the Pallas path in emulation — used by tests and
+CPU benchmarking).  All model code calls through these so the kernel layer
+is swappable per backend without touching the models.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .das_gemm import das_gemv as _das_gemv_pallas
+from .sparse_attn import sparse_attention as _sparse_attn_pallas
+from .ternary_gemm import K_SLAB, ternary_gemm as _ternary_gemm_pallas
+from .ternary_gemm import twd_decode as _twd_decode_pallas
+from .topk_mask import topk_mask as _topk_mask_pallas
+
+__all__ = [
+    "use_pallas", "twd_decode", "ternary_gemm", "das_gemv", "topk_mask",
+    "sparse_attention", "K_SLAB",
+]
+
+
+def use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def twd_decode(packed: jax.Array, k: int, *, mode: str = "auto") -> jax.Array:
+    """uint8 (Kp, N) -> int8 trits (k, N)."""
+    if mode == "pallas" or (mode == "auto" and use_pallas()):
+        return _twd_decode_pallas(packed)[:k]
+    if mode == "interpret":
+        return _twd_decode_pallas(packed, interpret=True)[:k]
+    return ref.twd_decode_ref(packed, k)
+
+
+def ternary_gemm(x: jax.Array, packed: jax.Array, w_scale: jax.Array,
+                 x_scale: jax.Array | None = None, *, mode: str = "auto",
+                 **kw) -> jax.Array:
+    """(M, K) x base-3-packed (K/5, N) -> (M, N) f32."""
+    if mode == "pallas" or (mode == "auto" and use_pallas()):
+        return _ternary_gemm_pallas(x, packed, w_scale, x_scale, **kw)
+    if mode == "interpret":
+        return _ternary_gemm_pallas(x, packed, w_scale, x_scale,
+                                    interpret=True, **kw)
+    k = x.shape[-1]
+    return ref.ternary_gemm_packed_ref(x, packed, w_scale, k, x_scale)
+
+
+def das_gemv(values: jax.Array, indices: jax.Array, w_trits: jax.Array,
+             w_scale: jax.Array, *, keep: int, mode: str = "auto",
+             **kw) -> jax.Array:
+    if mode == "pallas" or (mode == "auto" and use_pallas()):
+        return _das_gemv_pallas(values, indices, w_trits, w_scale, keep=keep, **kw)
+    if mode == "interpret":
+        return _das_gemv_pallas(values, indices, w_trits, w_scale, keep=keep,
+                                interpret=True, **kw)
+    return ref.das_gemv_ref(values, indices, w_trits, w_scale)
+
+
+def topk_mask(x: jax.Array, *, keep: int, block: int = 32,
+              mode: str = "auto", **kw) -> jax.Array:
+    """(…, K) -> int8 mask; leading dims flattened into rows."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if mode == "pallas" or (mode == "auto" and use_pallas()):
+        m = _topk_mask_pallas(x2, keep=keep, block=block, **kw)
+    elif mode == "interpret":
+        m = _topk_mask_pallas(x2, keep=keep, block=block, interpret=True, **kw)
+    else:
+        m = ref.das_topk_mask_ref(x2, block_size=block, keep=keep).astype(jnp.int8)
+    return m.reshape(*lead, x.shape[-1])
+
+
+def sparse_attention(q, k, v, q_pos, k_pos, *, sink: int, window: int,
+                     softcap: float | None = None, mode: str = "auto",
+                     **kw) -> jax.Array:
+    """Batched LPSA attention.  q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D);
+    q_pos: (B, Lq); k_pos: (B, Lk).  Returns (B, Hq, Lq, D)."""
+    if mode == "pallas" or (mode == "auto" and use_pallas()):
+        f = partial(_sparse_attn_pallas, sink=sink, window=window,
+                    softcap=softcap, **kw)
+        return jax.vmap(f)(q, k, v, q_pos, k_pos)
+    if mode == "interpret":
+        f = partial(_sparse_attn_pallas, sink=sink, window=window,
+                    softcap=softcap, interpret=True, **kw)
+        return jax.vmap(f)(q, k, v, q_pos, k_pos)
+
+    def one(qb, kb, vb, qp, kp):
+        hq, hkv = qb.shape[0], kb.shape[0]
+        n_rep = hq // hkv
+        def head(h_q, h_kv_arrs):
+            kk, vv = h_kv_arrs
+            return ref.sparse_attn_ref(h_q, kk, vv, qp, kp, sink=sink,
+                                       window=window, softcap=softcap)
+        kr = jnp.repeat(kb, n_rep, axis=0)
+        vr = jnp.repeat(vb, n_rep, axis=0)
+        return jax.vmap(lambda a, b, c: ref.sparse_attn_ref(
+            a, b, c, qp, kp, sink=sink, window=window, softcap=softcap))(
+                qb, kr, vr)
+    return jax.vmap(one)(q, k, v, q_pos, k_pos)

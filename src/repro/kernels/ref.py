@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the bit-faithful specification its kernel is tested against
+(tests/test_kernels_*.py sweep shapes & dtypes with assert_allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import twd
+from repro.core.lpsa import lpsa_allowed
+
+__all__ = [
+    "twd_decode_ref",
+    "ternary_gemm_ref",
+    "ternary_gemm_packed_ref",
+    "das_topk_mask_ref",
+    "das_gemv_ref",
+    "sparse_attn_ref",
+]
+
+
+def twd_decode_ref(packed: jax.Array, k: int) -> jax.Array:
+    """uint8 base-3 packed (Kp, N) -> int8 trits (k, N)."""
+    return twd.unpack_ternary(packed, k)
+
+
+def ternary_gemm_ref(x: jax.Array, w_trits: jax.Array, w_scale: jax.Array,
+                     x_scale: jax.Array | None = None) -> jax.Array:
+    """f32 = (x int8/float (M,K)) @ (trits (K,N)) * w_scale [* x_scale rows].
+
+    Accumulation in int32 when x is int8 (exact), f32 otherwise.
+    """
+    if x.dtype == jnp.int8:
+        acc = jax.lax.dot_general(
+            x.astype(jnp.int32), w_trits.astype(jnp.int32),
+            (((1,), (0,)), ((), ())))
+        out = acc.astype(jnp.float32) * w_scale
+        if x_scale is not None:
+            out = out * x_scale
+        return out
+    out = jnp.dot(x.astype(jnp.float32), w_trits.astype(jnp.float32)) * w_scale
+    if x_scale is not None:
+        out = out * x_scale
+    return out
+
+
+def ternary_gemm_packed_ref(x: jax.Array, packed: jax.Array, w_scale: jax.Array,
+                            k: int, x_scale: jax.Array | None = None) -> jax.Array:
+    """Fused TWD-decode + ternary GEMM oracle."""
+    w = twd_decode_ref(packed, k)
+    return ternary_gemm_ref(x, w, w_scale, x_scale)
+
+
+def das_topk_mask_ref(x: jax.Array, *, block_size: int, keep: int) -> jax.Array:
+    """Rank-based Top-K-per-block mask (== core.das.das_mask semantics).
+
+    keep lane i  <=>  #{ |x_j| > |x_i| } + #{ j<i : |x_j| == |x_i| }  <  keep.
+    The O(B^2) compare form is what the kernel vectorizes (B = 32).
+    """
+    kdim = x.shape[-1]
+    nb = kdim // block_size
+    a = jnp.abs(x).reshape(x.shape[:-1] + (nb, block_size))
+    gt = (a[..., None, :] > a[..., :, None]).sum(-1)          # strictly greater
+    lane = jnp.arange(block_size)
+    eq_before = ((a[..., None, :] == a[..., :, None])
+                 & (lane[None, :] < lane[:, None])).sum(-1)
+    rank = gt + eq_before
+    return (rank < keep).reshape(x.shape)
+
+
+def das_gemv_ref(values: jax.Array, indices: jax.Array, w_trits: jax.Array,
+                 w_scale: jax.Array) -> jax.Array:
+    """Compacted sparse GEMV oracle: gather kept weight rows, dense dot.
+
+    values/indices: (Kc,) — block-compacted activation (core.das.das_compact);
+    w_trits: (K, N) int8.  Returns (N,) f32.
+    """
+    rows = jnp.take(w_trits, indices, axis=0).astype(jnp.float32)  # (Kc, N)
+    return (values.astype(jnp.float32) @ rows) * w_scale
+
+
+def sparse_attn_ref(q, k, v, q_pos, k_pos, *, sink: int, window: int,
+                    softcap: float | None = None) -> jax.Array:
+    """Single-head sink+window attention oracle.
+
+    q: (Lq, D); k, v: (Lk, D); q_pos (Lq,), k_pos (Lk,) absolute positions
+    (k_pos < 0 marks an invalid/empty slot).  f32 softmax.
+    """
+    d = q.shape[-1]
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) / jnp.sqrt(
+        jnp.float32(d))
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = lpsa_allowed(q_pos[:, None], k_pos[None, :], sink, window)
+    mask = mask & (k_pos >= 0)[None, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask.any(-1, keepdims=True), p, 0.0)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,487 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the full-size config and the production mesh (single-pod 16x16,
+     multi-pod 2x16x16 — 512 virtual host devices, set above BEFORE any
+     other import so jax picks it up at first init),
+  2. lowers the right step (train_step / prefill_step / decode_step) from
+     ShapeDtypeStruct stand-ins (no allocation) with the production
+     in/out shardings,
+  3. compiles, prints memory_analysis() and cost_analysis(),
+  4. extracts the three roofline terms (compute / memory / collective) from
+     the compiled HLO: FLOPs + bytes from cost_analysis, collective bytes by
+     parsing the post-SPMD HLO for all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute operands,
+  5. appends a JSON record consumed by EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+"""
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import math         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.tree_util import DictKey  # noqa: E402
+
+from repro.configs import ARCH_MODULES, get_config  # noqa: E402
+from repro.configs.shapes import SHAPES, shape_by_name  # noqa: E402
+from repro.distributed import sharding  # noqa: E402
+from repro.launch.mesh import make_production_mesh, dp_axes_for  # noqa: E402
+from repro.launch.serve import make_decode_step, make_prefill_step  # noqa: E402
+from repro.launch.train import make_runtime, make_train_step, train_shardings  # noqa: E402
+from repro.models import model as MD  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# TPU v5e-class roofline constants (DESIGN.md §2)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+
+_DT_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+             "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2,
+             "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\w+\[[0-9,]*\]\S*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DT_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Per-device wire-byte estimate by collective kind (post-SPMD HLO)."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line.split("=")[-1][:40]:
+            continue
+        kind = m.group(1)
+        shapes = _SHAPE_RE.findall(line.split("=", 1)[1])
+        if not shapes:
+            continue
+        out_bytes = _shape_bytes(*shapes[0])
+        opnd = sum(_shape_bytes(d, s) for d, s in shapes[1:]) or out_bytes
+        if kind == "all-reduce":
+            out[kind] += 2 * out_bytes
+        elif kind == "reduce-scatter":
+            out[kind] += opnd
+        else:
+            out[kind] += out_bytes
+    return out
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (MoE: routed top_k + shared only)."""
+    if cfg.moe is None:
+        return cfg.param_count()
+    e = cfg.moe
+    total = cfg.param_count()
+    all_experts = cfg.n_layers * e.n_experts * 3 * cfg.d_model * e.d_expert
+    active = cfg.n_layers * (e.top_k + e.n_shared) * 3 * cfg.d_model * e.d_expert
+    return total - all_experts + active
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D for training, 2*N*D for serving (active params for MoE)."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch  # decode: per one new token
+
+
+# ---------------------------------------------------------------------------
+# cache sharding specs
+# ---------------------------------------------------------------------------
+
+def _cache_leaf_spec(path, leaf, cfg, dp):
+    names = [str(k.key) for k in path if isinstance(k, DictKey)]
+    stacked = "stacked" in names
+    name = names[-1] if names else ""
+    nd = leaf.ndim - (1 if stacked else 0)
+    off = 1 if stacked else 0
+    dims = leaf.shape[off:]
+
+    def axis_div(i):  # sharding requires exact divisibility by model=16
+        return dims[i] % 16 == 0
+
+    spec: list = [None] * nd
+    if name in ("k", "v") and nd == 4:
+        spec[0] = dp or None
+        for cand in (2, 3):     # prefer kv-heads, fall back to head_dim
+            if axis_div(cand):
+                spec[cand] = "model"
+                break
+    elif name == "conv" and nd == 3:
+        spec = [dp or None, None, "model" if axis_div(2) else None]
+    elif name in ("ssm", "wkv", "s") and nd == 4:
+        spec[0] = dp or None
+        for cand in (1, 2, 3):
+            if axis_div(cand):
+                spec[cand] = "model"
+                break
+    elif name in ("shift_t", "shift_c") and nd == 3:
+        spec = [dp or None, None, None]
+    elif name == "pos":
+        spec = [None] * nd
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def cache_specs(cfg, caches_shape, dp):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: _cache_leaf_spec(p, x, cfg, dp), caches_shape)
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh, *, variant: str = "paper",
+               override_layers: int | None = None):
+    """-> (lower_fn, meta) — lower_fn() returns the jax `Lowered`."""
+    cfg = get_config(arch)
+    if override_layers is not None:
+        cfg = dataclasses.replace(cfg, n_layers=override_layers,
+                                  scan_layers=False)
+    shape = shape_by_name(shape_name)
+    multi_pod = "pod" in mesh.axis_names
+    dp = dp_axes_for(mesh, shape.global_batch)
+
+    # `variant` is a comma-joined token set (hillclimb knobs):
+    #   paper     — TWD packed + DAS + LPSA (decode_32k keeps full cache)
+    #   baseline  — naive: int8-resident weights, full attention, no DAS
+    #   lpsa      — ring cache on decode_32k too
+    #   int8w/bf16w — serve weight format (isolates the TWD term)
+    #   nodas     — disable DAS
+    #   noremat   — activation checkpointing off (train)
+    #   dp        — replicate params, batch over (data, model): TP -> pure DP
+    tokens = set(variant.split(","))
+    if "baseline" in tokens:
+        cfg = dataclasses.replace(
+            cfg, ternary=dataclasses.replace(cfg.ternary, das=None,
+                                             serve_format="int8"),
+            lpsa=None)
+    if "int8w" in tokens:
+        cfg = dataclasses.replace(cfg, ternary=dataclasses.replace(
+            cfg.ternary, serve_format="int8"))
+    if "bf16w" in tokens:
+        cfg = dataclasses.replace(cfg, ternary=dataclasses.replace(
+            cfg.ternary, serve_format="bf16"))
+    if "nodas" in tokens:
+        cfg = dataclasses.replace(cfg, ternary=dataclasses.replace(
+            cfg.ternary, das=None))
+    if "noremat" in tokens:
+        cfg = dataclasses.replace(cfg, remat=False)
+    serve_sparse = not (shape.name == "decode_32k" and "lpsa" not in tokens)
+    if "lpsa" in tokens or shape.name == "long_500k":
+        serve_sparse = True
+
+    rt = make_runtime(mesh, cfg, shape.global_batch, serve_sparse=serve_sparse)
+    b, s = shape.global_batch, shape.seq_len
+    tokens_dtype = jnp.int32
+    embeds = MD.uses_embeds(cfg)
+
+    def in_shape():
+        if embeds:
+            return jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                        jnp.dtype(cfg.dtype))
+        return jax.ShapeDtypeStruct((b, s), tokens_dtype)
+
+    params_shape = jax.eval_shape(
+        lambda: MD.init_params(jax.random.PRNGKey(0), cfg))
+
+    ns = lambda spec_tree: jax.tree.map(  # noqa: E731
+        lambda sp: NamedSharding(mesh, sp), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(lambda p: adamw.adamw_init(p), params_shape)
+        p_sh, o_sh, b_sh = train_shardings(mesh, params_shape, opt_shape,
+                                           multi_pod=multi_pod)
+        if "dpattn" in tokens:  # MoE: EP stays on model, rest replicated,
+            # batch over data only (attention compute replicated x16 --
+            # cheap next to experts; kills the TP activation all-reduces)
+            def _dpattn(spec_tree, shapes):
+                def one(path, sp, shp):
+                    names = [str(k.key) for k in path
+                             if hasattr(k, "key")]
+                    if any(n.startswith("experts_") for n in names):
+                        return NamedSharding(mesh, sp)
+                    return NamedSharding(mesh, P())
+                return jax.tree_util.tree_map_with_path(
+                    one, spec_tree, shapes,
+                    is_leaf=lambda x: isinstance(x, P))
+            pspecs = sharding.param_specs(params_shape)
+            p_sh = _dpattn(pspecs, params_shape)
+            z1 = sharding.zero1_specs(sharding.param_specs(opt_shape.m),
+                                      opt_shape.m, mesh.shape["data"])
+            o_sh = adamw.AdamWState(
+                step=NamedSharding(mesh, P()),
+                m=_dpattn(z1, opt_shape.m), v=_dpattn(z1, opt_shape.v))
+            b_sh = {"inputs": NamedSharding(mesh, P(("data",))),
+                    "labels": NamedSharding(mesh, P(("data",)))}
+        if "dp" in tokens:   # pure DP + ZeRO: params replicated, batch wide
+            dp_all = tuple(mesh.axis_names)
+            repl = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                sharding.param_specs(params_shape),
+                                is_leaf=lambda x: isinstance(x, P))
+            # moments: start from replicated (the TP specs may hit dims the
+            # model axis doesn't divide, e.g. bitnet's d_ff=5460), then ZeRO
+            # over data and model wherever divisible
+            z0 = jax.tree.map(lambda _: P(),
+                              sharding.param_specs(opt_shape.m),
+                              is_leaf=lambda x: isinstance(x, P))
+            z1 = sharding.zero1_specs(z0, opt_shape.m, mesh.shape["data"])
+            z2 = sharding.zero1_specs(z1, opt_shape.m, mesh.shape["model"],
+                                      data_axis="model")
+            o_sh = adamw.AdamWState(
+                step=NamedSharding(mesh, P()),
+                m=jax.tree.map(lambda sp: NamedSharding(mesh, sp), z2,
+                               is_leaf=lambda x: isinstance(x, P)),
+                v=jax.tree.map(lambda sp: NamedSharding(mesh, sp), z2,
+                               is_leaf=lambda x: isinstance(x, P)))
+            p_sh = repl
+            b_sh = {"inputs": NamedSharding(mesh, P(dp_all)),
+                    "labels": NamedSharding(mesh, P(dp_all))}
+        step = make_train_step(cfg, rt)
+        batch_shape = {"inputs": in_shape(),
+                       "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if embeds:
+            b_sh = {"inputs": NamedSharding(mesh, P(dp, None, None)),
+                    "labels": NamedSharding(mesh, P(dp))}
+
+        def lower():
+            return jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                           out_shardings=(p_sh, o_sh, None)).lower(
+                params_shape, opt_shape, batch_shape)
+        n_state_bytes = sum(
+            x.size * x.dtype.itemsize
+            for x in jax.tree.leaves((params_shape, opt_shape)))
+        return lower, dict(cfg=cfg, shape=shape, rt=rt,
+                           state_bytes=n_state_bytes)
+
+    sparams_shape = jax.eval_shape(
+        lambda: MD.export_serving(MD.init_params(jax.random.PRNGKey(0), cfg),
+                                  cfg))
+    sp_sh = ns(sharding.param_specs(sparams_shape))
+    state_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(sparams_shape))
+
+    if shape.kind == "prefill":
+        if "dp" in tokens:  # replicate serving weights, batch on data only.
+            # NOTE: analytically worse for prefill at batch<devices — the
+            # model axis idles (x16 redundant compute) and the batch cannot
+            # span 256 ways; kept for completeness (see EXPERIMENTS §Perf).
+            sp_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                 sharding.param_specs(sparams_shape),
+                                 is_leaf=lambda x: isinstance(x, P))
+            dp = ("data",)
+        step = make_prefill_step(cfg, rt, max_len=s + 1)
+        in_sh = NamedSharding(mesh, P(dp, None, None) if embeds else P(dp))
+
+        def lower():
+            return jax.jit(step, in_shardings=(sp_sh, in_sh)).lower(
+                sparams_shape, in_shape())
+        return lower, dict(cfg=cfg, shape=shape, rt=rt,
+                           state_bytes=state_bytes)
+
+    # decode: one token against a seq_len-deep cache/state
+    caches_shape = jax.eval_shape(
+        lambda: MD.init_caches(None, cfg, b, s, rt, jnp.dtype(cfg.dtype)))
+    c_sh = ns(cache_specs(cfg, caches_shape, dp))
+    cache_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(caches_shape))
+    step = make_decode_step(cfg, rt)
+    if embeds:
+        tok_shape = jax.ShapeDtypeStruct((b, 1, cfg.d_model),
+                                         jnp.dtype(cfg.dtype))
+        tok_sh = NamedSharding(mesh, P(dp, None, None))
+    else:
+        tok_shape = jax.ShapeDtypeStruct((b,), jnp.int32)
+        tok_sh = NamedSharding(mesh, P(dp))
+
+    def lower():
+        return jax.jit(step, in_shardings=(sp_sh, c_sh, tok_sh, None)).lower(
+            sparams_shape, caches_shape, tok_shape,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return lower, dict(cfg=cfg, shape=shape, rt=rt,
+                       state_bytes=state_bytes + cache_bytes)
+
+
+# ---------------------------------------------------------------------------
+
+def _cell_cost(arch, shape_name, mesh, variant, override_layers):
+    """(flops, bytes, collective-bytes) of an unrolled `override_layers` model.
+
+    XLA's cost_analysis visits scan bodies ONCE regardless of trip count, so
+    per-group costs come from unrolled 1-group and 2-group compiles; the cell
+    total is reconstructed linearly (run_cell)."""
+    lower_fn, _ = build_cell(arch, shape_name, mesh, variant=variant,
+                             override_layers=override_layers)
+    with mesh:
+        compiled = lower_fn().compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(sum(coll.values())), coll)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             variant: str = "paper", verbose: bool = True,
+             scan_correction: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = math.prod(mesh.devices.shape)
+    t0 = time.time()
+    lower_fn, meta = build_cell(arch, shape_name, mesh, variant=variant)
+    with mesh:
+        lowered = lower_fn()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:  # CPU backend may not implement it
+        mem = None
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    coll_total = float(sum(coll.values()))
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    shape = meta["shape"]
+    cfg = meta["cfg"]
+
+    # ---- scan correction: reconstruct totals from unrolled 1/2-group costs
+    plen = len(cfg.layer_pattern)
+    n_groups, tail = divmod(cfg.n_layers, plen)
+    corrected = False
+    if scan_correction and cfg.scan_layers and n_groups >= 1 \
+            and cfg.n_layers > plen:
+        try:
+            f1, b1, c1, _ = _cell_cost(arch, shape_name, mesh, variant, plen)
+            f2, b2, c2, _ = _cell_cost(arch, shape_name, mesh, variant,
+                                       2 * plen)
+            mult = (n_groups - 1) + tail / plen
+            flops = f1 + (f2 - f1) * mult
+            bytes_acc = b1 + (b2 - b1) * mult
+            coll_total = c1 + (c2 - c1) * mult
+            corrected = True
+        except Exception as e:  # noqa: BLE001
+            print(f"  [warn] scan correction failed: {e!r}"[:200])
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_total / LINK_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    useful = mf / (flops * n_dev) if flops else 0.0
+
+    rec = dict(
+        arch=arch, shape=shape_name, mesh="2x16x16" if multi_pod else "16x16",
+        variant=variant, devices=n_dev,
+        flops_per_dev=flops, bytes_per_dev=bytes_acc,
+        collective_bytes_per_dev=coll_total, collectives=coll,
+        t_compute_s=t_compute, t_memory_s=t_memory, t_collective_s=t_coll,
+        dominant=dominant, model_flops=mf,
+        useful_flops_frac=useful, scan_corrected=corrected,
+        raw_flops_per_dev=float(cost.get("flops", 0.0)),
+        state_bytes_per_dev=meta["state_bytes"] / n_dev,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory_analysis=str(mem) if mem is not None else None,
+    )
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']} ({variant}): "
+              f"OK lower={t_lower:.0f}s compile={t_compile:.0f}s")
+        print(f"  flops/dev={flops:.3e} bytes/dev={bytes_acc:.3e} "
+              f"coll/dev={coll_total:.3e}")
+        print(f"  roofline: compute={t_compute:.4f}s memory={t_memory:.4f}s "
+              f"collective={t_coll:.4f}s -> {dominant}-bound")
+        print(f"  state/dev={rec['state_bytes_per_dev']/2**30:.2f} GiB  "
+              f"useful-flops={useful:.2%}")
+        if mem is not None:
+            print(f"  memory_analysis: {mem}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--variant", default="paper")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCH_MODULES)[:10] if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records, failures = [], []
+    done = set()
+    if args.resume and args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            prev = json.load(f)
+        records = prev.get("records", [])
+        done = {(r["arch"], r["shape"], r["mesh"], r.get("variant", "paper"))
+                for r in records}
+        print(f"[dryrun] resuming: {len(done)} cells already done")
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                key = (arch, shape_name, "2x16x16" if mp else "16x16",
+                       args.variant)
+                if key in done:
+                    continue
+                try:
+                    # §Roofline is single-pod only: multi-pod cells need
+                    # compile-success + memory, not the 3x scan-correction.
+                    records.append(run_cell(arch, shape_name, multi_pod=mp,
+                                            variant=args.variant,
+                                            scan_correction=not mp))
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape_name, mp, repr(e)[:500]))
+                    print(f"[dryrun] FAIL {arch} x {shape_name} "
+                          f"multi_pod={mp}: {e!r}"[:600])
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump({"records": records, "failures": failures},
+                                  f, indent=1)
+    print(f"[dryrun] {len(records)} cells OK, {len(failures)} failed")
+    return 0 if not failures else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

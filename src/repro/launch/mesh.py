@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Axes: ("data", "model") single pod (16x16 = 256 chips), ("pod", "data",
+"model") across 2 pods (512 chips).  A FUNCTION, not a module constant, so
+importing this module never touches jax device state (smoke tests must see
+1 device; only launch/dryrun.py forces 512 host devices).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axes", "dp_axes_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — run under "
+            f"launch/dryrun.py (XLA_FLAGS=--xla_force_host_platform_device_count=512)")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
+def mesh_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def dp_axes_for(mesh, global_batch: int) -> tuple[str, ...]:
+    """Data-parallel axes usable for this batch (batch 1 => replicate)."""
+    cand = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = 1
+    out = []
+    for a in cand:
+        if global_batch % (dp * mesh.shape[a]) == 0:
+            out.append(a)
+            dp *= mesh.shape[a]
+    return tuple(out)

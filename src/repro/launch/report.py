@@ -1,0 +1,92 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md §Dry-run / §Roofline
+tables.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.report dryrun_results.json > tables.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _f(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x >= 1e4 or x < 1e-3:
+        return f"{x:.2e}"
+    return f"{x:.3f}"
+
+
+def render(path: str) -> str:
+    with open(path) as f:
+        data = json.load(f)
+    recs = data["records"]
+    fails = data.get("failures", [])
+    out = []
+
+    out.append("### §Dry-run — lower+compile results, every (arch × shape × mesh)\n")
+    out.append(f"**{len(recs)} cells compiled, {len(fails)} failures.** "
+               "Single-pod mesh 16×16 (256 chips), multi-pod 2×16×16 (512). "
+               "HLO flops/bytes are scan-corrected (unrolled 1- vs 2-group "
+               "reconstruction); collective bytes parsed from post-SPMD HLO; "
+               "state = actual per-device bytes under the production "
+               "shardings (params + optimizer for train; packed serving "
+               "weights + KV/state caches for serving).\n")
+    out.append("| arch | shape | mesh | HLO flops/dev | HLO bytes/dev | "
+               "HLO coll B/dev | state GiB/dev | compile s |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{_f(r['flops_per_dev'])} | {_f(r['bytes_per_dev'])} | "
+            f"{_f(r['collective_bytes_per_dev'])} | "
+            f"{r.get('state_gib_per_dev', r['state_bytes_per_dev']/2**30):.2f} "
+            f"| {r['compile_s']} |")
+    if fails:
+        out.append(f"\n**Failures ({len(fails)}):**\n")
+        for a, s, mp, e in fails:
+            out.append(f"- {a} × {s} multi_pod={mp}: `{e[:160]}`")
+
+    out.append("""
+### §Roofline — three terms per cell (single-pod, per training/serving step)
+
+Constants: 197 TFLOP/s bf16/chip, 819 GB/s HBM/chip, 50 GB/s/link ICI.
+Primary terms are **workload-intrinsic** (launch/analytic.py) because XLA's
+`cost_analysis` visits `while` bodies once (inner pack/kv/chunk scans) and
+its op-level "bytes accessed" counts fusion-internal operands; the HLO
+columns above cross-check magnitudes. `roofline%` = t_compute / max(terms) —
+the fraction of the binding resource's time doing model math.
+`MODEL_FLOPS` = 6·N·D (train) / 2·N_active·D (serve); `useful/HLO` =
+MODEL_FLOPS / (scan-corrected HLO FLOPs × chips) — how much compiled compute
+is model math (catches remat/replication waste; decode cells are low because
+batch-1/small-batch GEMV replicates work across the data axis).
+""")
+    out.append("| arch | shape | t_compute | t_memory | t_collective | "
+               "dominant | roofline% | MODEL_FLOPS | useful/HLO | "
+               "one-line diagnosis |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    diag = {
+        "train_4k": "TP-16 activation all-reduces dominate (2/block, ×2 bwd)"
+                    " — see §Perf cell C",
+        "prefill_32k": "same TP all-reduce wall; LPSA keeps memory term low",
+        "decode_32k": "weight + KV streaming (GEMV); TWD/LPSA cut it — §Perf"
+                      " cell A",
+        "long_500k": "O(TL_SA)/O(1) state ⇒ tiny terms; batch-1 replicates"
+                     " compute across data axis (×16 redundancy)",
+    }
+    for r in recs:
+        if r["mesh"] != "16x16" or "a_t_compute" not in r:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_f(r['a_t_compute'])} | "
+            f"{_f(r['a_t_memory'])} | {_f(r['a_t_collective'])} | "
+            f"**{r['a_dominant']}** | {r['roofline_frac']:.1%} | "
+            f"{_f(r['model_flops'])} | {r['useful_flops_frac']:.1%} | "
+            f"{diag.get(r['shape'], '')} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1]))

@@ -1,0 +1,2 @@
+"""Model zoo: composable decoder stacks for all assigned architectures."""
+from . import model  # noqa: F401

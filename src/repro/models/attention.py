@@ -1,0 +1,188 @@
+"""GQA attention with TENET ternary projections + LPSA / local / full modes.
+
+Layer kinds (configs.base.layer_pattern):
+  "attn"  — global attention: full causal, or sink+window when cfg.lpsa set
+  "local" — sliding-window attention (window = cfg.window, no sink)
+
+Three execution paths share one set of (ternary) projection weights:
+  * train / full-prefill: chunked flash attention in pure JAX (differentiable,
+    O(L·bk) live memory — scores never materialize globally),
+  * streaming prefill: core.lpsa.lpsa_prefill (pack-fused, Algorithm 1),
+  * decode: one-token attention against a full or ring KV cache.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import lpsa as lpsa_lib
+from repro.models import layers as L
+from repro.models.ternary_linear import tlin_apply, tlin_init
+
+__all__ = [
+    "attn_init", "qkv_project", "flash_masked", "attn_train",
+    "attn_prefill_streaming", "attn_decode", "kind_sink_window",
+]
+
+NEG_INF = -1e30
+FULL_SINK = 1 << 30   # sink larger than any position == full causal
+
+
+def kind_sink_window(cfg: ModelConfig, kind: str, serve_sparse: bool) -> tuple[int, int]:
+    """(sink, window) for a layer kind.  serve_sparse toggles LPSA on globals."""
+    if kind == "local":
+        return 0, cfg.window
+    if cfg.lpsa is not None and serve_sparse:
+        return cfg.lpsa.sink, cfg.lpsa.window
+    return FULL_SINK, 0
+
+
+def attn_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    return {
+        "wq": tlin_init(ks[0], d, qd, dtype),
+        "wk": tlin_init(ks[1], d, kvd, dtype),
+        "wv": tlin_init(ks[2], d, kvd, dtype),
+        "wo": tlin_init(ks[3], qd, d, dtype, scale=(qd * 2 * cfg.n_layers) ** -0.5),
+    }
+
+
+def qkv_project(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                kernel_mode: str = "ref"):
+    """(B, L, D) -> q (B,L,Hq,Dh), k/v (B,L,Hkv,Dh) through ternary linears."""
+    b, l, _ = x.shape
+    tc = cfg.ternary
+    q = tlin_apply(p["wq"], x, tc, kernel_mode=kernel_mode)
+    k = tlin_apply(p["wk"], x, tc, kernel_mode=kernel_mode)
+    v = tlin_apply(p["wv"], x, tc, kernel_mode=kernel_mode)
+    hd = cfg.head_dim_
+    return (q.reshape(b, l, cfg.n_heads, hd),
+            k.reshape(b, l, cfg.n_kv_heads, hd),
+            v.reshape(b, l, cfg.n_kv_heads, hd))
+
+
+def _rope_fn(cfg: ModelConfig):
+    def f(x, pos):
+        cos, sin = L.rope(pos, cfg.head_dim_, cfg.rope_theta)
+        return L.apply_rope(x, cos, sin)
+    return f
+
+
+def flash_masked(q, k, v, q_pos, k_pos, *, sink: int, window: int,
+                 softcap: float | None = None, kv_chunk: int = 512) -> jax.Array:
+    """Differentiable chunked flash attention with the LPSA mask family.
+
+    q: (B, Lq, Hq, D); k, v: (B, Lk, Hkv, D); q_pos (Lq,), k_pos (Lk,).
+    Scans KV chunks with an online softmax; per-step live memory is
+    O(Lq * kv_chunk) — the XLA analogue of the Pallas kernel.
+    """
+    b, lq, hq, d = q.shape
+    _, lk, hkv, _ = k.shape
+    n_rep = hq // hkv
+    c = min(kv_chunk, lk)
+    if lk % c:
+        c = lk  # fall back to a single chunk for awkward cache sizes
+    scale = d ** -0.5
+    qh = jnp.swapaxes(q, 1, 2).astype(jnp.float32)       # (B,Hq,Lq,D)
+    kc = k.reshape(b, lk // c, c, hkv, d).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, lk // c, c, hkv, d).transpose(1, 0, 3, 2, 4)
+    kpc = k_pos.reshape(lk // c, c)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, kp = blk                                  # (B,Hkv,c,D), (c,)
+        kb = jnp.repeat(kb, n_rep, axis=1).astype(jnp.float32)
+        vb = jnp.repeat(vb, n_rep, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kb) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = lpsa_lib.lpsa_allowed(q_pos[:, None], kp[None, :], sink, window)
+        mask = mask & (kp >= 0)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
+        p = jnp.where(mask[None, None], jnp.exp(s - m_safe), 0.0)
+        alpha = jnp.where(m <= NEG_INF, 0.0, jnp.exp(m - m_safe))
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, hq, lq, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, lq, 1), jnp.float32),
+            jnp.zeros((b, hq, lq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (kc, vc, kpc))
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    return jnp.swapaxes(out, 1, 2).astype(q.dtype)        # (B,Lq,Hq,D)
+
+
+def attn_train(p: dict, cfg: ModelConfig, x: jax.Array, kind: str, *,
+               serve_sparse: bool = True, kernel_mode: str = "ref") -> jax.Array:
+    """Training / full-prefill attention over a whole sequence."""
+    b, l, _ = x.shape
+    sink, window = kind_sink_window(cfg, kind, serve_sparse)
+    q, k, v = qkv_project(p, cfg, x, kernel_mode=kernel_mode)
+    pos = jnp.arange(l)
+    rp = _rope_fn(cfg)
+    q, k = rp(q, pos), rp(k, pos)
+    o = flash_masked(q, k, v, pos, pos, sink=sink, window=window,
+                     softcap=cfg.attn_softcap)
+    o = o.reshape(b, l, cfg.q_dim)
+    return tlin_apply(p["wo"], o, cfg.ternary, kernel_mode=kernel_mode)
+
+
+def attn_prefill_streaming(p: dict, cfg: ModelConfig, x: jax.Array, kind: str,
+                           *, kernel_mode: str = "ref"):
+    """LPSA Algorithm-1 prefill: fused pack-chunked projection + attention.
+
+    Returns (y, stream_state) — the scan carry becomes the decode ring cache
+    (models.kvcache.ring_from_stream).
+    """
+    sink, window = kind_sink_window(cfg, kind, True)
+    if sink >= FULL_SINK:
+        raise ValueError("streaming prefill needs a sparse pattern (lpsa/local)")
+    spec = lpsa_lib.LpsaSpec(sink=sink, window=window,
+                             chunk=cfg.lpsa.chunk if cfg.lpsa else 256)
+    proj = partial(_stream_proj, p, cfg, kernel_mode)
+    o, state = lpsa_lib.lpsa_prefill(
+        x, proj, spec=spec, num_q_heads=cfg.n_heads,
+        num_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+        rope=_rope_fn(cfg), softcap=cfg.attn_softcap, return_state=True)
+    b, l = x.shape[0], x.shape[1]
+    y = tlin_apply(p["wo"], o.reshape(b, l, cfg.q_dim), cfg.ternary,
+                   kernel_mode=kernel_mode)
+    return y, state
+
+
+def _stream_proj(p, cfg, kernel_mode, pack):
+    return qkv_project(p, cfg, pack, kernel_mode=kernel_mode)
+
+
+def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
+                t: jax.Array, kind: str, *, serve_sparse: bool = True,
+                kernel_mode: str = "ref"):
+    """One-token decode.  x: (B, 1, D); cache from models.kvcache.
+
+    Returns (y (B,1,D), new_cache).
+    """
+    from repro.models import kvcache  # local import to avoid cycle
+
+    b = x.shape[0]
+    sink, window = kind_sink_window(cfg, kind, serve_sparse)
+    q, k, v = qkv_project(p, cfg, x, kernel_mode=kernel_mode)
+    pos = t[None] if t.ndim == 0 else t
+    rp = _rope_fn(cfg)
+    q, k = rp(q, pos), rp(k, pos)
+    ring = sink < FULL_SINK
+    cache = kvcache.attn_write(cache, k, v, t, sink=sink, window=window,
+                               ring=ring)
+    k_all, v_all, k_pos = kvcache.attn_read(cache)
+    o = flash_masked(q, k_all, v_all, pos, k_pos, sink=sink, window=window,
+                     softcap=cfg.attn_softcap,
+                     kv_chunk=min(512, k_all.shape[1]))
+    o = o.reshape(b, 1, cfg.q_dim)
+    return tlin_apply(p["wo"], o, cfg.ternary, kernel_mode=kernel_mode), cache

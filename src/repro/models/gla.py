@@ -1,0 +1,84 @@
+"""GLA — Gated Linear Attention block (paper Sec. V-D, ref [61]).
+
+q/k/v projections + a low-rank data-dependent forget gate
+alpha_t = sigmoid(x W_a1 W_a2)^{1/tau} per key dim, output gate, and the
+chunked linear-attention engine shared with RWKV6.  Ternary + DAS apply to
+all projections — the paper's GLA+TQ+DAS configuration (Table III).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.linear_attn import chunked_linear_attn, linear_attn_step
+from repro.models.ternary_linear import tlin_apply, tlin_init
+
+__all__ = ["gla_init", "gla_train", "gla_decode"]
+
+GATE_LORA = 16
+TAU = 16.0
+
+
+def gla_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim_
+    ks = jax.random.split(key, 8)
+    return {
+        "wq": tlin_init(ks[0], d, h * hd, dtype),
+        "wk": tlin_init(ks[1], d, h * hd, dtype),
+        "wv": tlin_init(ks[2], d, h * hd, dtype),
+        "wg": tlin_init(ks[3], d, h * hd, dtype),
+        "wa1": L.dense_init(ks[4], d, GATE_LORA, dtype),
+        "wa2": L.dense_init(ks[5], GATE_LORA, h * hd, dtype),
+        "ln_x": {"scale": jnp.ones((h * hd,), dtype),
+                 "bias": jnp.zeros((h * hd,), dtype)},
+        "wo": tlin_init(ks[6], h * hd, d, dtype,
+                        scale=(h * hd * 2 * cfg.n_layers) ** -0.5),
+    }
+
+
+def _proj(p, cfg, x, kernel_mode):
+    b, l, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim_
+    tc = cfg.ternary
+    q = tlin_apply(p["wq"], x, tc, kernel_mode=kernel_mode).reshape(b, l, h, hd)
+    k = tlin_apply(p["wk"], x, tc, kernel_mode=kernel_mode).reshape(b, l, h, hd)
+    v = tlin_apply(p["wv"], x, tc, kernel_mode=kernel_mode).reshape(b, l, h, hd)
+    g = tlin_apply(p["wg"], x, tc, kernel_mode=kernel_mode)
+    la = jax.nn.log_sigmoid(
+        x.astype(jnp.float32) @ p["wa1"].astype(jnp.float32)
+        @ p["wa2"].astype(jnp.float32)) / TAU
+    return q, k, v, g, la.reshape(b, l, h, hd)
+
+
+def _out(p, cfg, o, g, kernel_mode):
+    h, hd = cfg.n_heads, cfg.head_dim_
+    b, l = o.shape[0], o.shape[1]
+    of = o.reshape(b, l, h, hd).astype(jnp.float32)
+    mu, var = of.mean(-1, keepdims=True), of.var(-1, keepdims=True)
+    of = ((of - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, l, h * hd)
+    of = (of * p["ln_x"]["scale"].astype(jnp.float32)
+          + p["ln_x"]["bias"].astype(jnp.float32)).astype(g.dtype)
+    y = of * jax.nn.silu(g)
+    return tlin_apply(p["wo"], y, cfg.ternary, kernel_mode=kernel_mode)
+
+
+def gla_train(p: dict, cfg: ModelConfig, x: jax.Array, *,
+              kernel_mode: str = "ref", chunk: int = 64,
+              s0: jax.Array | None = None):
+    q, k, v, g, la = _proj(p, cfg, x, kernel_mode)
+    o, s_fin = chunked_linear_attn(q, k, v, la, chunk=chunk, mode="gla", s0=s0)
+    return _out(p, cfg, o.reshape(x.shape[0], x.shape[1], -1), g,
+                kernel_mode), s_fin
+
+
+def gla_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: dict, *,
+               kernel_mode: str = "ref"):
+    q, k, v, g, la = _proj(p, cfg, x, kernel_mode)
+    o, s_new = linear_attn_step(q[:, 0], k[:, 0], v[:, 0], la[:, 0],
+                                state["s"], mode="gla")
+    y = _out(p, cfg, o.reshape(x.shape[0], 1, -1), g, kernel_mode)
+    return y, {"s": s_new}

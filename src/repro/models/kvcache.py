@@ -1,0 +1,120 @@
+"""KV caches and recurrent states for serving.
+
+Two attention cache layouts:
+  * full  — (B, S_max, Hkv, Dh) with a write cursor: the conventional cache
+    (the paper's "naive" baseline whose DRAM traffic LPSA removes).
+  * ring  — (B, sink+window, Hkv, Dh) + slot->position map: O(TL_SA) memory
+    at ANY context length (the LPSA decode cache; core.lpsa.decode_slot).
+
+Recurrent states for SSM/linear-attention families (mamba / rwkv / gla) are
+fixed-size per token — the "native sub-quadratic" path of the zoo.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SsmConfig
+from repro.core.lpsa import decode_slot
+
+__all__ = [
+    "init_attn_full", "init_attn_ring", "attn_write", "attn_read",
+    "ring_from_stream", "init_mamba_state", "init_rwkv_state",
+    "init_gla_state",
+]
+
+
+# --------------------------------------------------------------------------
+# attention caches
+# --------------------------------------------------------------------------
+
+def init_attn_full(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+            "pos": jnp.full((max_len,), -1, jnp.int32)}
+
+
+def init_attn_ring(cfg: ModelConfig, batch: int, sink: int, window: int,
+                   dtype=jnp.bfloat16) -> dict:
+    shp = (batch, sink + window, cfg.n_kv_heads, cfg.head_dim_)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+            "pos": jnp.full((sink + window,), -1, jnp.int32)}
+
+
+def attn_write(cache: dict, k_new: jax.Array, v_new: jax.Array, t: jax.Array,
+               *, sink: int, window: int, ring: bool) -> dict:
+    """Insert one token's K/V at absolute position t (same t across batch)."""
+    slot = decode_slot(t, sink, window) if ring else t
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                            k_new.astype(cache["k"].dtype),
+                                            slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                            v_new.astype(cache["v"].dtype),
+                                            slot, axis=1)
+    pos = jax.lax.dynamic_update_slice(cache["pos"], t[None].astype(jnp.int32),
+                                       (slot,))
+    return {"k": k, "v": v, "pos": pos}
+
+
+def attn_read(cache: dict):
+    """-> (k (B,S,Hkv,Dh), v, k_pos (S,)); invalid slots have pos = -1."""
+    return cache["k"], cache["v"], cache["pos"]
+
+
+def ring_from_stream(cfg: ModelConfig, state, *, sink: int, window: int) -> dict:
+    """Convert a core.lpsa.lpsa_prefill scan carry into a decode ring cache.
+
+    state = (k_sink, v_sink, k_win, v_win, t_end): sink slots land in ring
+    slots [0, sink); window tokens (positions t_end-window..t_end-1, oldest
+    first in the stream buffer) land at their decode_slot positions.
+    """
+    k_sink, v_sink, k_win, v_win, t_end = state
+    dtype = k_sink.dtype
+    b = k_sink.shape[0]
+    # sink slots [0, sink): valid while position < t_end
+    sink_pos = jnp.arange(sink)
+    sink_valid = sink_pos < t_end
+    # each ring slot j in [sink, sink+window) pulls the unique stream-buffer
+    # position p with p ≡ (j - sink) (mod window) inside [t_end-window, t_end)
+    j = jnp.arange(window)                       # slot offset = j
+    base = t_end - window                        # stream buffer start position
+    p = base + (j - (base - sink)) % window
+    ring_valid = (p >= sink) & (p >= 0)
+    idx = jnp.clip(p - base, 0, window - 1)      # index into the stream buffer
+    k_ring = jnp.take(k_win, idx, axis=1).astype(dtype)
+    v_ring = jnp.take(v_win, idx, axis=1).astype(dtype)
+    k = jnp.concatenate([k_sink.astype(dtype), k_ring], axis=1)
+    v = jnp.concatenate([v_sink.astype(dtype), v_ring], axis=1)
+    pos = jnp.concatenate([jnp.where(sink_valid, sink_pos, -1),
+                           jnp.where(ring_valid, p, -1)]).astype(jnp.int32)
+    return {"k": k, "v": v, "pos": pos}
+
+
+# --------------------------------------------------------------------------
+# recurrent states
+# --------------------------------------------------------------------------
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    s: SsmConfig = cfg.ssm or SsmConfig()
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, s.state_dim), dtype),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    hd = cfg.head_dim_
+    return {
+        "wkv": jnp.zeros((batch, cfg.n_heads, hd, hd), dtype),
+        "shift_t": jnp.zeros((batch, 1, cfg.d_model), dtype),   # time-mix x_{t-1}
+        "shift_c": jnp.zeros((batch, 1, cfg.d_model), dtype),   # channel-mix
+    }
+
+
+def init_gla_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    hd = cfg.head_dim_
+    return {"s": jnp.zeros((batch, cfg.n_heads, hd, hd), dtype)}

@@ -1,0 +1,83 @@
+"""Shared model layers: norms, RoPE, embeddings, init helpers.
+
+All models are functional: params are nested dicts of arrays, apply functions
+are pure.  Leaf names follow the sharding conventions consumed by
+repro.distributed.sharding (wq/wk/wv/w_in/w_gate = column-parallel,
+wo/w_out = row-parallel, embed = vocab-parallel, …).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rmsnorm", "init_rmsnorm", "rope", "apply_rope", "softcap",
+    "dense_init", "embed_init", "take_embed", "logits_from_embed",
+    "ACT",
+]
+
+ACT = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for absolute positions.  positions: (...,) int."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., L, H, D); cos/sin: (..., L, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> jax.Array:
+    s = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def take_embed(embed: jax.Array, tokens: jax.Array, *, scale: bool = False) -> jax.Array:
+    x = jnp.take(embed, tokens, axis=0)
+    if scale:  # gemma-style sqrt(d) input scaling
+        x = x * jnp.asarray(x.shape[-1] ** 0.5, x.dtype)
+    return x
+
+
+def logits_from_embed(embed: jax.Array, x: jax.Array,
+                      cap: float | None = None) -> jax.Array:
+    lg = jnp.einsum("...d,vd->...v", x, embed.astype(x.dtype))
+    return softcap(lg.astype(jnp.float32), cap)

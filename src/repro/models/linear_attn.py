@@ -1,0 +1,102 @@
+"""Chunked gated linear attention — shared engine for GLA and RWKV6.
+
+Recurrence (per head, per key-dim gated decay alpha_t ∈ (0,1]):
+
+    S_t = diag(alpha_t) S_{t-1} + k_t^T v_t
+    GLA  : o_t = q_t S_t
+    RWKV6: o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)      (bonus on self)
+
+Chunked parallel form (the FLA trick, paper refs [61][62]): within a chunk,
+with La = cumsum(log alpha) (per key dim),
+
+    o_t = (q_t ⊙ e^{La_t - d_t}) @ S_in                        (inter)
+        + Σ_{s≺t} [(q_t ⊙ e^{La_t - d_t}) · (k_s ⊙ e^{-La_s})] v_s   (intra)
+    S_out = diag(e^{La_L}) S_in + Σ_s (k_s ⊙ e^{La_L - La_s})^T v_s
+
+where d_t = log alpha_t for RWKV (S_{t-1} excludes step t's decay) and 0 for
+GLA, and ≺ is < for RWKV (self handled by the u bonus) and ≤ for GLA.
+La is clamped at CLAMP so e^{-La} stays finite; decays below e^CLAMP are
+numerically zero anyway.  The chunk loop is a lax.scan (O(L·c·D) memory);
+`linear_attn_step` is the exact single-token decode recurrence.
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_linear_attn", "linear_attn_step"]
+
+# per-step log-decay floor: keeps the factorized chunk form exact in f32
+# (|cumsum| <= chunk * |LOG_A_MIN| => exp(-cumsum) < f32 max) while a decay
+# of e^-1.5 per step is already numerically-zero retention within a chunk.
+LOG_A_MIN = -1.5
+
+
+def chunked_linear_attn(q, k, v, log_a, *, chunk: int,
+                        mode: Literal["gla", "rwkv"] = "gla",
+                        u: jax.Array | None = None,
+                        s0: jax.Array | None = None):
+    """q,k,v,log_a: (B, L, H, D) (log_a per key dim, <= 0).
+
+    Returns (o (B,L,H,D), S_final (B,H,Dk,Dv)).  u: (H, D) RWKV bonus.
+    """
+    b, l, h, d = q.shape
+    c = min(chunk, l)
+    if c * -LOG_A_MIN > 85.0:
+        c = max(1, int(85.0 // -LOG_A_MIN))
+        while l % c:
+            c -= 1
+    if l % c:
+        raise ValueError(f"L={l} not divisible by chunk={c}")
+    n = l // c
+    tohead = lambda x: x.reshape(b, n, c, h, d).transpose(1, 0, 3, 2, 4)  # noqa: E731
+    qc, kc, vc, lac = map(tohead, (q, k, v, log_a))      # (n, B, H, c, D)
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+
+    causal = jnp.tril(jnp.ones((c, c), bool), 0 if mode == "gla" else -1)
+
+    def step(s_in, blk):
+        qb, kb, vb, la = (x.astype(jnp.float32) for x in blk)
+        la = jnp.maximum(la, LOG_A_MIN)
+        cla = jnp.cumsum(la, axis=-2)                    # inclusive (B,H,c,D)
+        d_t = la if mode == "rwkv" else 0.0
+        q_eff = qb * jnp.exp(cla - d_t)
+        k_eff = kb * jnp.exp(-cla)
+        scores = jnp.einsum("bhtd,bhsd->bhts", q_eff, k_eff)
+        scores = jnp.where(causal, scores, 0.0)
+        o = jnp.einsum("bhts,bhsd->bhtd", scores, vb)    # intra
+        o += jnp.einsum("bhtd,bhde->bhte", q_eff, s_in)  # inter
+        if mode == "rwkv" and u is not None:
+            diag = jnp.einsum("bhtd,hd,bhtd->bht", qb, u.astype(jnp.float32), kb)
+            o += diag[..., None] * vb
+        la_end = cla[..., -1:, :]                        # (B,H,1,D)
+        k_state = kb * jnp.exp(la_end - cla)
+        s_out = jnp.exp(la_end[..., 0, :, None]) * s_in + jnp.einsum(
+            "bhtd,bhte->bhde", k_state, vb)
+        return s_out, o
+
+    s_fin, oc = jax.lax.scan(step, s0, (qc, kc, vc, lac))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(b, l, h, d)
+    return o.astype(q.dtype), s_fin
+
+
+def linear_attn_step(q, k, v, log_a, s, *, mode: Literal["gla", "rwkv"] = "gla",
+                     u: jax.Array | None = None):
+    """Exact one-token recurrence.  q,k,v,log_a: (B, H, D); s: (B, H, Dk, Dv)."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    a = jnp.exp(jnp.maximum(log_a.astype(jnp.float32), LOG_A_MIN))
+    kv = kf[..., :, None] * vf[..., None, :]             # (B,H,Dk,Dv)
+    if mode == "rwkv":
+        wkv = s + (u.astype(jnp.float32)[None, :, :, None] if u is not None
+                   else 1.0) * kv
+        o = jnp.einsum("bhd,bhde->bhe", qf, wkv)
+        s_new = a[..., None] * s + kv
+    else:
+        s_new = a[..., None] * s + kv
+        o = jnp.einsum("bhd,bhde->bhe", qf, s_new)
+    return o.astype(q.dtype), s_new

@@ -1,0 +1,163 @@
+"""Mamba2 (SSD) block — chunked state-space duality form.
+
+Per head h with scalar decay a_t = exp(dt_t * A_h)  (A_h < 0):
+
+    S_t = a_t S_{t-1} + dt_t * x_t ⊗ B_t           S: (hd, N)
+    y_t = S_t C_t + D_h x_t
+
+Chunked computation (chunk c): intra-chunk is an attention-like masked
+matmul with decay weights exp(La_t - La_s); inter-chunk flows through the
+carried state — same scheme as linear_attn but with scalar-per-head decay
+and (B_t, C_t) playing (k, v) roles.  All projections are TENET ternary
+linears; conv is a width-4 depthwise causal conv.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SsmConfig
+from repro.models import layers as L
+from repro.models.ternary_linear import tlin_apply, tlin_init
+
+__all__ = ["mamba_init", "mamba_train", "mamba_decode", "mamba_dims"]
+
+
+def mamba_dims(cfg: ModelConfig) -> tuple[int, int]:
+    s: SsmConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    return d_inner, d_inner // s.head_dim
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    s: SsmConfig = cfg.ssm
+    d = cfg.d_model
+    di, nh = mamba_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": tlin_init(ks[0], d, di, dtype),
+        "wx": tlin_init(ks[1], d, di, dtype),
+        "wb": L.dense_init(ks[2], d, s.state_dim, dtype),
+        "wc": L.dense_init(ks[3], d, s.state_dim, dtype),
+        "wdt": L.dense_init(ks[4], d, nh, dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)).astype(dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "conv": (jax.random.normal(ks[5], (s.conv_width, di), jnp.float32)
+                 * 0.2).astype(dtype),
+        "norm": L.init_rmsnorm(di, dtype),
+        "wo": tlin_init(ks[6], di, d, dtype,
+                        scale=(di * 2 * cfg.n_layers) ** -0.5),
+    }
+
+
+def _proj(p, cfg, x, kernel_mode):
+    tc = cfg.ternary
+    z = tlin_apply(p["wz"], x, tc, kernel_mode=kernel_mode)
+    xs = tlin_apply(p["wx"], x, tc, kernel_mode=kernel_mode)
+    bmat = jnp.einsum("...d,dn->...n", x, p["wb"].astype(x.dtype))
+    cmat = jnp.einsum("...d,dn->...n", x, p["wc"].astype(x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("...d,dh->...h", x.astype(jnp.float32),
+                   p["wdt"].astype(jnp.float32)) + p["dt_bias"].astype(jnp.float32))
+    return z, xs, bmat, cmat, dt
+
+
+def _conv_full(p, xs):
+    """Causal depthwise conv over (B, L, di)."""
+    w = p["conv"].astype(jnp.float32)                    # (cw, di)
+    cw = w.shape[0]
+    xp = jnp.pad(xs.astype(jnp.float32), ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + xs.shape[1], :] * w[i] for i in range(cw))
+    return jax.nn.silu(out).astype(xs.dtype)
+
+
+def mamba_train(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                kernel_mode: str = "ref",
+                s0: jax.Array | None = None, conv0: jax.Array | None = None):
+    """Full-sequence SSD.  x: (B, L, D) -> (y (B,L,D), (S_fin, conv_tail))."""
+    s: SsmConfig = cfg.ssm
+    b, l, d = x.shape
+    di, nh = mamba_dims(cfg)
+    z, xs, bmat, cmat, dt = _proj(p, cfg, x, kernel_mode)
+    if conv0 is not None:
+        xs_ext = jnp.concatenate([conv0.astype(xs.dtype), xs], axis=1)
+        xs_conv = _conv_full(p, xs_ext)[:, conv0.shape[1]:]
+    else:
+        xs_conv = _conv_full(p, xs)
+    conv_tail = (jnp.concatenate([conv0, xs], axis=1)[:, -(s.conv_width - 1):]
+                 if conv0 is not None else xs[:, -(s.conv_width - 1):])
+    xh = xs_conv.reshape(b, l, nh, s.head_dim)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (nh,)
+    log_a = dt * a[None, None, :]                         # (B, L, nh) <= 0
+
+    c = min(s.chunk, l)
+    if l % c:
+        c = l
+    n = l // c
+    ch = lambda t, shp: t.reshape((b, n, c) + shp).swapaxes(0, 1)  # noqa: E731
+    xc = ch(xh, (nh, s.head_dim))
+    bc = ch(bmat, (s.state_dim,))
+    cc = ch(cmat, (s.state_dim,))
+    dtc = ch(dt, (nh,))
+    lac = ch(log_a, (nh,))
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    if s0 is None:
+        s0 = jnp.zeros((b, nh, s.head_dim, s.state_dim), jnp.float32)
+
+    def step(carry, blk):
+        s_in = carry
+        xb, bb, cb, dtb, la = (t.astype(jnp.float32) for t in blk)
+        cla = jnp.cumsum(la, axis=1)                       # (B, c, nh)
+        # pairwise decay exp(cla_t - cla_s); clamp the *difference* at 0 so
+        # masked (t < s) entries can't overflow — cla itself stays exact.
+        decay = jnp.exp(jnp.minimum(cla[:, :, None, :] - cla[:, None, :, :],
+                                    0.0))                  # (B,t,s,nh)
+        scores = jnp.einsum("btn,bsn->bts", cb, bb)[:, :, :, None] * decay
+        scores = jnp.where(causal[None, :, :, None], scores, 0.0)
+        scores = scores * dtb[:, None, :, :]               # dt_s factor
+        y = jnp.einsum("btsh,bshd->bthd", scores, xb)      # intra
+        y += jnp.exp(cla)[:, :, :, None] * jnp.einsum(
+            "bhdn,btn->bthd", s_in, cb)                    # inter
+        la_end = cla[:, -1:, :]
+        # B_s weighted by remaining decay and dt_s  -> (B, c, nh, N)
+        b_state = (jnp.exp(la_end - cla) * dtb)[..., None] * bb[:, :, None, :]
+        s_out = (jnp.exp(la_end)[:, 0, :, None, None] * s_in
+                 + jnp.einsum("bshd,bshn->bhdn", xb, b_state))
+        return s_out, y
+
+    s_fin, yc = jax.lax.scan(step, s0, (xc, bc, cc, dtc, lac))
+    y = yc.swapaxes(0, 1).reshape(b, l, nh, s.head_dim)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, l, di).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = tlin_apply(p["wo"], y, cfg.ternary, kernel_mode=kernel_mode)
+    return out, (s_fin, conv_tail)
+
+
+def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: dict, *,
+                 kernel_mode: str = "ref"):
+    """One token.  x: (B, 1, D); state {"conv": (B, cw-1, di), "ssm": ...}."""
+    s: SsmConfig = cfg.ssm
+    b = x.shape[0]
+    di, nh = mamba_dims(cfg)
+    z, xs, bmat, cmat, dt = _proj(p, cfg, x, kernel_mode)
+    conv_in = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
+    w = p["conv"].astype(jnp.float32)
+    xc = jax.nn.silu(jnp.einsum("bld,ld->bd", conv_in.astype(jnp.float32), w))
+    new_conv = conv_in[:, 1:]
+    xh = xc.reshape(b, nh, s.head_dim).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    la = dt[:, 0] * a[None, :]                             # (B, nh)
+    ssm = state["ssm"]
+    s_new = (jnp.exp(la)[:, :, None, None] * ssm
+             + dt[:, 0][:, :, None, None] * xh[..., None]
+             * bmat[:, 0][:, None, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhdn,bn->bhd", s_new, cmat[:, 0].astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = tlin_apply(p["wo"], y, cfg.ternary, kernel_mode=kernel_mode)
+    return out, {"conv": new_conv, "ssm": s_new}

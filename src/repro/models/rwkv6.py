@@ -1,0 +1,151 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent per-channel decay +
+channel-mix FFN.  All projections are TENET ternary linears (the paper's
+GLA experiment, Sec. V-D, is the template for attention-free models).
+
+Simplifications vs. the full Finch recipe (noted in DESIGN.md): token-shift
+uses learned static mix coefficients (the data-dependent LoRA shift is
+dropped); the decay LoRA  w_t = exp(-exp(w0 + tanh(x W_d1) W_d2))  — the
+headline data-dependent decay — is kept.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.linear_attn import chunked_linear_attn, linear_attn_step
+from repro.models.ternary_linear import tlin_apply, tlin_init
+
+__all__ = ["rwkv_init", "rwkv_time_mix", "rwkv_channel_mix",
+           "rwkv_time_mix_step", "rwkv_channel_mix_step"]
+
+DECAY_LORA = 64
+
+
+def rwkv_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = cfg.n_heads, cfg.head_dim_
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix
+        "wr": tlin_init(ks[0], d, h * hd, dtype),
+        "wk": tlin_init(ks[1], d, h * hd, dtype),
+        "wv": tlin_init(ks[2], d, h * hd, dtype),
+        "wg": tlin_init(ks[3], d, h * hd, dtype),
+        "wo": tlin_init(ks[4], h * hd, d, dtype,
+                        scale=(h * hd * 2 * cfg.n_layers) ** -0.5),
+        "w_decay1": L.dense_init(ks[5], d, DECAY_LORA, dtype),
+        "w_decay2": L.dense_init(ks[6], DECAY_LORA, h * hd, dtype, scale=0.1),
+        "w0": jnp.full((h * hd,), -2.0, dtype),   # base decay ~ exp(-exp(-2))
+        "u": (jax.random.normal(ks[7], (h, hd), jnp.float32) * 0.1).astype(dtype),
+        "mix_t": jnp.full((4, d), 0.5, dtype),    # r/k/v/g token-shift mixes
+        "ln_x": {"scale": jnp.ones((h * hd,), dtype),
+                 "bias": jnp.zeros((h * hd,), dtype)},
+        # channel-mix
+        "ck": tlin_init(ks[8], d, f, dtype),
+        "cv": tlin_init(ks[9], f, d, dtype, scale=(f * 2 * cfg.n_layers) ** -0.5),
+        "cr": tlin_init(ks[10], d, d, dtype),
+        "mix_c": jnp.full((2, d), 0.5, dtype),    # k/r mixes
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x_{t-1} stream: zero (or carried `prev`) at t=0."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev.astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _decay_log(p, xr):
+    """log w_t = -exp(w0 + tanh(x Wd1) Wd2)  (per channel, <= 0)."""
+    lora = jnp.tanh(xr.astype(jnp.float32) @ p["w_decay1"].astype(jnp.float32))
+    lw = p["w0"].astype(jnp.float32) + lora @ p["w_decay2"].astype(jnp.float32)
+    return -jnp.exp(jnp.clip(lw, -8.0, 4.0))
+
+
+def _groupnorm(p, x, h, hd, eps=1e-5):
+    b, l, _ = x.shape
+    xh = x.reshape(b, l, h, hd).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    y = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(b, l, h * hd)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def _time_mix_proj(p, cfg, x, x_prev, kernel_mode):
+    h, hd = cfg.n_heads, cfg.head_dim_
+    mix = p["mix_t"].astype(x.dtype)
+    xr = x * mix[0] + x_prev * (1 - mix[0])
+    xk = x * mix[1] + x_prev * (1 - mix[1])
+    xv = x * mix[2] + x_prev * (1 - mix[2])
+    xg = x * mix[3] + x_prev * (1 - mix[3])
+    tc = cfg.ternary
+    b, l, _ = x.shape
+    r = tlin_apply(p["wr"], xr, tc, kernel_mode=kernel_mode).reshape(b, l, h, hd)
+    k = tlin_apply(p["wk"], xk, tc, kernel_mode=kernel_mode).reshape(b, l, h, hd)
+    v = tlin_apply(p["wv"], xv, tc, kernel_mode=kernel_mode).reshape(b, l, h, hd)
+    g = tlin_apply(p["wg"], xg, tc, kernel_mode=kernel_mode)
+    la = _decay_log(p, xr).reshape(b, l, h, hd)
+    return r, k, v, g, la
+
+
+def _channel_mix(p, cfg, x, x_prev, kernel_mode):
+    mix = p["mix_c"].astype(x.dtype)
+    xk = x * mix[0] + x_prev * (1 - mix[0])
+    xr = x * mix[1] + x_prev * (1 - mix[1])
+    tc = cfg.ternary
+    k = tlin_apply(p["ck"], xk, tc, kernel_mode=kernel_mode)
+    kv = tlin_apply(p["cv"], jnp.square(jax.nn.relu(k)), tc,
+                    kernel_mode=kernel_mode)
+    r = tlin_apply(p["cr"], xr, tc, kernel_mode=kernel_mode)
+    return jax.nn.sigmoid(r) * kv
+
+
+def rwkv_time_mix(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                  kernel_mode: str = "ref", chunk: int = 64,
+                  wkv0: jax.Array | None = None,
+                  prev: jax.Array | None = None):
+    """Time-mix over a sequence.  x: (B, L, D) (pre-normed).
+
+    Returns (y, {"wkv", "shift_t"}).
+    """
+    h, hd = cfg.n_heads, cfg.head_dim_
+    b = x.shape[0]
+    r, k, v, g, la = _time_mix_proj(p, cfg, x, _shift(x, prev), kernel_mode)
+    o, s_fin = chunked_linear_attn(r, k, v, la, chunk=chunk, mode="rwkv",
+                                   u=p["u"], s0=wkv0)
+    o = _groupnorm(p["ln_x"], o.reshape(b, -1, h * hd), h, hd)
+    o = o * jax.nn.silu(g)
+    y = tlin_apply(p["wo"], o, cfg.ternary, kernel_mode=kernel_mode)
+    return y, {"wkv": s_fin, "shift_t": x[:, -1:]}
+
+
+def rwkv_channel_mix(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                     kernel_mode: str = "ref",
+                     prev: jax.Array | None = None):
+    """Channel-mix FFN.  Returns (y, shift_c = x[:, -1:])."""
+    y = _channel_mix(p, cfg, x, _shift(x, prev), kernel_mode)
+    return y, x[:, -1:]
+
+
+def rwkv_time_mix_step(p: dict, cfg: ModelConfig, x: jax.Array, state: dict, *,
+                       kernel_mode: str = "ref"):
+    """One-token time-mix.  x: (B, 1, D); state {"wkv", "shift_t"}."""
+    h, hd = cfg.n_heads, cfg.head_dim_
+    b = x.shape[0]
+    r, k, v, g, la = _time_mix_proj(p, cfg, x, state["shift_t"].astype(x.dtype),
+                                    kernel_mode)
+    o, s_new = linear_attn_step(r[:, 0], k[:, 0], v[:, 0], la[:, 0],
+                                state["wkv"], mode="rwkv", u=p["u"])
+    o = _groupnorm(p["ln_x"], o.reshape(b, 1, h * hd), h, hd)
+    o = o * jax.nn.silu(g)
+    y = tlin_apply(p["wo"], o, cfg.ternary, kernel_mode=kernel_mode)
+    return y, {"wkv": s_new, "shift_t": x}
+
+
+def rwkv_channel_mix_step(p: dict, cfg: ModelConfig, x: jax.Array,
+                          prev: jax.Array, *, kernel_mode: str = "ref"):
+    y = _channel_mix(p, cfg, x, prev.astype(x.dtype), kernel_mode)
+    return y, x

@@ -1,0 +1,94 @@
+"""TernaryLinear — the paper's Ternary Linear module as a first-class layer.
+
+One logical layer, three physical representations:
+
+  * **master**  {"w": f32/bf16}          — training / QAT: STE ternary
+    fake-quant + A8 activation fake-quant + DAS mask (Eq. 1 end-to-end).
+  * **packed**  {"packed": u8, "scale"}  — serving: base-3 TWD bytes; the
+    matmul goes through kernels/ops (Pallas fused decode on TPU, jnp
+    reference elsewhere).
+  * **trits**   {"trits": i8, "scale"}   — the paper's "naive INT8/INT2"
+    ablation points (weights resident unpacked).
+
+`export_serving` converts master -> packed/trits/bf16 offline, exactly like
+the paper's offline weight encoder feeding the TWD ROM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TernaryConfig
+from repro.core import das as das_lib
+from repro.core import ternary as tq
+from repro.core import twd
+from repro.kernels import ops
+
+__all__ = ["tlin_init", "tlin_apply", "export_tlin"]
+
+
+def tlin_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32,
+              scale: float | None = None) -> dict:
+    s = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * s
+    return {"w": w.astype(dtype)}
+
+
+def _das_maybe(x: jax.Array, tc: TernaryConfig) -> jax.Array:
+    if tc.das is None:
+        return x
+    mask = das_lib.das_mask(x, block_size=tc.das.block, keep=tc.das.keep)
+    return das_lib.das_apply(x, mask)
+
+
+def tlin_apply(p: dict, x: jax.Array, tc: TernaryConfig, *,
+               kernel_mode: str = "ref") -> jax.Array:
+    """Apply the ternary linear in whatever representation `p` carries."""
+    if not tc.enabled:
+        w = p["w"] if "w" in p else p["w_hp"]
+        return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+    if "w" in p:  # --- training / QAT path (differentiable) ----------------
+        xs = _das_maybe(x, tc)
+        xq = tq.int8_fake_quant(xs)
+        wq = tq.ternary_fake_quant(p["w"])
+        return jnp.einsum("...k,kn->...n", xq, wq.astype(xq.dtype))
+
+    # --- serving paths ------------------------------------------------------
+    xs = _das_maybe(x, tc)
+    scale = p["scale"]
+    if "packed" in p:
+        k = xs.shape[-1]
+        lead = xs.shape[:-1]
+        x2 = xs.reshape(-1, k)
+        if kernel_mode in ("pallas", "interpret"):
+            y = ops.ternary_gemm(x2, p["packed"], scale, mode=kernel_mode)
+        else:
+            w = twd.unpack_ternary_arith(p["packed"], k)
+            y = jnp.einsum("mk,kn->mn", x2.astype(jnp.float32),
+                           w.astype(jnp.float32)) * scale
+        n = y.shape[-1]
+        return y.reshape(*lead, n).astype(x.dtype)
+    if "trits" in p:
+        w = p["trits"].astype(x.dtype) * scale.astype(x.dtype)
+        return jnp.einsum("...k,kn->...n", xs, w)
+    raise KeyError(f"unrecognized ternary-linear params: {sorted(p)}")
+
+
+def export_tlin(p: dict, tc: TernaryConfig) -> dict:
+    """Master -> serving representation (offline encoder for the TWD path)."""
+    if "w" not in p:
+        return p
+    if not tc.enabled:
+        return {"w_hp": p["w"]}
+    tw = tq.ternary_quantize(p["w"])
+    if tc.serve_format == "packed":
+        return {"packed": twd.pack_ternary(tw.values, row_align=16),
+                "scale": tw.scale}
+    if tc.serve_format == "int8":
+        return {"trits": tw.values, "scale": tw.scale}
+    if tc.serve_format == "bf16":
+        return {"trits": tw.values.astype(jnp.bfloat16).astype(jnp.int8),
+                "scale": tw.scale}
+    raise ValueError(tc.serve_format)

@@ -1,0 +1,2 @@
+"""Optimizer substrate: AdamW (ZeRO-1 layout), schedules, grad machinery."""
+from . import adamw, grad, schedule  # noqa: F401

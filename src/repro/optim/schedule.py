@@ -1,0 +1,33 @@
+"""LR schedules: linear warmup + {cosine, WSD}.
+
+WSD (warmup-stable-decay) is MiniCPM's schedule (arXiv:2404.06395) — the
+assigned minicpm-2b config trains with it; cosine is the default elsewhere.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "wsd_schedule"]
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, peak_lr * cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> stable plateau -> short exponential decay tail."""
+    s = jnp.asarray(step, jnp.float32)
+    decay_steps = max(int(total * decay_frac), 1)
+    decay_start = total - decay_steps
+    warm = peak_lr * s / max(warmup, 1)
+    tail_prog = jnp.clip((s - decay_start) / decay_steps, 0.0, 1.0)
+    tail = peak_lr * jnp.power(final_frac, tail_prog)
+    out = jnp.where(s < warmup, warm, peak_lr)
+    return jnp.where(s > decay_start, tail, out)

@@ -1,0 +1,50 @@
+"""Serving == training numerics: prefill + decode reproduces forward.
+
+Exact (<=1e-4) with quantization disabled; loose with ternary+DAS on
+(STE rounding / TopK ties flip discretely under 1e-7 noise — inherent to
+quantized+sparse models, not a serving bug; see DESIGN.md)."""
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_MODULES, get_config, reduced
+from repro.models import model as MD
+from repro.models.transformer import Runtime
+
+RT = Runtime()
+B, S, PRE = 2, 32, 16
+
+
+def _run(cfg):
+    p = MD.init_params(jax.random.PRNGKey(0), cfg)
+    if MD.uses_embeds(cfg):
+        xin = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                                jnp.float32)
+        pre, dec = xin[:, :PRE], lambda t: xin[:, t:t + 1]
+    else:
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+        xin, pre, dec = toks, toks[:, :PRE], lambda t: toks[:, t]
+    full = MD.forward(p, cfg, xin, RT)
+    lg, caches = MD.prefill(p, cfg, pre, RT, max_len=S)
+    errs = [float(jnp.abs(lg - full[:, PRE - 1]).max())]
+    for t in range(PRE, S):
+        lg, caches = MD.decode_step(p, cfg, caches, dec(t), jnp.array(t), RT)
+        errs.append(float(jnp.abs(lg - full[:, t]).max()))
+    return max(errs)
+
+
+@pytest.mark.parametrize("arch", list(ARCH_MODULES))
+def test_exact_without_quantization(arch):
+    cfg = reduced(get_config(arch))
+    cfg = dataclasses.replace(cfg, ternary=dataclasses.replace(
+        cfg.ternary, enabled=False, das=None))
+    assert _run(cfg) < 1e-4
+
+
+@pytest.mark.parametrize("arch", ["bitnet-1.3b", "gemma3-1b", "zamba2-2.7b",
+                                  "rwkv6-3b", "gla-1.3b"])
+def test_quantized_close(arch):
+    cfg = reduced(get_config(arch))
+    assert _run(cfg) < 5e-2  # boundary flips only

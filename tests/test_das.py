@@ -1,0 +1,61 @@
+"""DAS block Top-K sparsity (Sec. III-C): exactness + optimality properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import das
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 32, 64]),
+       st.integers(1, 16))
+def test_mask_counts(seed, block, keep):
+    keep = min(keep, block)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((3, block * 4)), jnp.float32)
+    m = np.asarray(das.das_mask(x, block_size=block, keep=keep))
+    counts = m.reshape(3, 4, block).sum(-1)
+    assert np.all(counts == keep)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_mask_keeps_largest(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((2, 64)).astype(np.float32)
+    m = np.asarray(das.das_mask(jnp.asarray(x), block_size=32, keep=16))
+    for r in range(2):
+        for b in range(2):
+            blk = np.abs(x[r, b * 32:(b + 1) * 32])
+            mb = m[r, b * 32:(b + 1) * 32]
+            # kept magnitude sum == top-16 magnitude sum (optimality)
+            assert np.isclose(blk[mb].sum(), np.sort(blk)[-16:].sum(),
+                              rtol=1e-6)
+
+
+def test_compact_matches_masked_dense(rng):
+    x = jnp.asarray(rng.standard_normal((3, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 16)), jnp.float32)
+    m = das.das_mask(x, block_size=32, keep=16)
+    ca = das.das_compact(x, block_size=32, keep=16)
+    ref = np.asarray(das.das_apply(x, m)) @ np.asarray(w)
+    out = np.asarray(das.das_gemm_ref(ca, w))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_compact_indices_sorted_and_valid(rng):
+    x = jnp.asarray(rng.standard_normal((2, 96)), jnp.float32)
+    ca = das.das_compact(x, block_size=32, keep=8)
+    idx = np.asarray(ca.indices).reshape(2, 3, 8)
+    for b in range(3):
+        blk = idx[:, b]
+        assert np.all((blk >= b * 32) & (blk < (b + 1) * 32))
+        assert np.all(np.diff(blk, axis=-1) > 0)
+
+
+def test_gradient_flows_through_kept_only(rng):
+    import jax
+    x = jnp.asarray(rng.standard_normal((1, 64)), jnp.float32)
+    m = das.das_mask(x, block_size=32, keep=16)
+    g = jax.grad(lambda x_: jnp.sum(das.das_apply(x_, m)))(x)
+    assert np.array_equal(np.asarray(g) != 0, np.asarray(m))

@@ -1,0 +1,92 @@
+"""LPSA dataflow (Sec. IV-B): streaming == quadratic oracle, ring eviction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lpsa
+
+
+def _proj(dm, hq, hkv, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    wq = jax.random.normal(ks[0], (dm, hq * d)) * 0.2
+    wk = jax.random.normal(ks[1], (dm, hkv * d)) * 0.2
+    wv = jax.random.normal(ks[2], (dm, hkv * d)) * 0.2
+
+    def f(p):
+        b, c, _ = p.shape
+        return ((p @ wq).reshape(b, c, hq, d), (p @ wk).reshape(b, c, hkv, d),
+                (p @ wv).reshape(b, c, hkv, d))
+    return f
+
+
+@pytest.mark.parametrize("sink,window,chunk", [
+    (4, 16, 8), (0, 8, 4), (8, 8, 16), (2, 30, 8), (4, 12, 32),
+])
+def test_streaming_prefill_matches_oracle(sink, window, chunk):
+    B, L, Hq, Hkv, D, DM = 2, 64, 4, 2, 8, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, L, DM))
+    proj = _proj(DM, Hq, Hkv, D)
+    spec = lpsa.LpsaSpec(sink=sink, window=window, chunk=chunk)
+    o = lpsa.lpsa_prefill(x, proj, spec=spec, num_q_heads=Hq,
+                          num_kv_heads=Hkv, head_dim=D)
+    q, k, v = proj(x)
+    ref = lpsa.masked_attention_ref(q, k, v, sink=sink, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_mask_row_budget():
+    m = np.asarray(lpsa.lpsa_mask(256, 16, 48))
+    counts = m.sum(-1)
+    # every row attends exactly TL_SA = sink + window keys once warmed up
+    assert counts.max() <= 16 + 48
+    assert counts[-1] == 16 + 48
+    assert np.all(np.triu(m, 1) == 0)
+    assert np.all(m[:, 0][16:])  # sink column always visible
+
+
+def test_decode_ring_with_eviction():
+    """Ring cache beyond capacity must equal the quadratic oracle."""
+    B, Hq, Hkv, D = 2, 4, 2, 8
+    sink, window = 4, 12
+    L = 48  # > sink + window: eviction exercised
+    key = jax.random.PRNGKey(2)
+    k_all = jax.random.normal(key, (B, L, Hkv, D))
+    v_all = jax.random.normal(jax.random.PRNGKey(3), (B, L, Hkv, D))
+    q_all = jax.random.normal(jax.random.PRNGKey(4), (B, L, Hq, D))
+
+    kc = jnp.zeros((B, sink + window, Hkv, D))
+    vc = jnp.zeros_like(kc)
+    pos = jnp.full((sink + window,), -1, jnp.int32)
+    outs = []
+    for t in range(L):
+        slot = int(lpsa.decode_slot(jnp.array(t), sink, window))
+        kc = kc.at[:, slot].set(k_all[:, t])
+        vc = vc.at[:, slot].set(v_all[:, t])
+        pos = pos.at[slot].set(t)
+        o = lpsa.lpsa_decode_attend(q_all[:, t:t+1], kc, vc,
+                                    jnp.broadcast_to(pos, (B, sink + window)),
+                                    jnp.full((B,), t), sink=sink,
+                                    window=window)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    ref = lpsa.masked_attention_ref(q_all, k_all, v_all, sink=sink,
+                                    window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_allowed_semantics():
+    qp = jnp.array([100])
+    assert bool(lpsa.lpsa_allowed(qp, jnp.array([3]), 4, 16))       # sink
+    assert bool(lpsa.lpsa_allowed(qp, jnp.array([85]), 4, 16))      # window edge
+    assert not bool(lpsa.lpsa_allowed(qp, jnp.array([84]), 4, 16))  # evicted
+    assert not bool(lpsa.lpsa_allowed(qp, jnp.array([101]), 4, 16))  # future
+    # ring-consistency: every visible non-sink key maps to a distinct slot
+    qs = 100
+    vis = [p for p in range(qs + 1)
+           if bool(lpsa.lpsa_allowed(jnp.array([qs]), jnp.array([p]), 4, 16))
+           and p >= 4]
+    slots = [int(lpsa.decode_slot(jnp.array(p), 4, 16)) for p in vis]
+    assert len(set(slots)) == len(slots)

@@ -1,0 +1,12 @@
+"""split_stages + GPipe schedule shape properties (single-device checks;
+numeric equivalence lives in test_multidevice.py)."""
+from repro.distributed.pipeline import split_stages
+
+
+def test_split_stages_partitions():
+    seq = tuple(range(10))
+    st = split_stages(seq, 2)
+    assert st == ((0, 1, 2, 3, 4), (5, 6, 7, 8, 9))
+    st3 = split_stages(seq, 3)
+    assert sum(len(s) for s in st3) == 10
+    assert all(len(s) <= 4 for s in st3)

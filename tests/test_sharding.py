@@ -1,0 +1,66 @@
+"""Sharding rules: spec assignment, ZeRO-1 divisibility, cache specs."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.distributed import sharding
+from repro.models import model as MD
+from repro.optim import adamw
+
+
+def _specs(arch):
+    cfg = reduced(get_config(arch))
+    p = jax.eval_shape(lambda: MD.init_params(jax.random.PRNGKey(0), cfg))
+    return p, sharding.param_specs(p)
+
+
+def test_attention_tp_pattern():
+    p, s = _specs("bitnet-1.3b")
+    blk = s["layers"]["tail"][0]
+    assert blk["attn"]["wq"]["w"] == P(None, "model")
+    assert blk["attn"]["wo"]["w"] == P("model", None)
+    assert blk["ffn"]["w_in"]["w"] == P(None, "model")
+    assert blk["ffn"]["w_out"]["w"] == P("model", None)
+    assert s["embed"] == P("model", None)
+    assert blk["norm1"]["scale"] == P()
+
+
+def test_moe_expert_parallel():
+    p, s = _specs("qwen3-moe-30b-a3b")
+    blk = s["layers"]["tail"][0]
+    assert blk["moe"]["experts_gate"]["w"] == P("model", None, None)
+    assert blk["moe"]["router"] in (P(), P(None, None))
+
+
+def test_stacked_gets_group_axis():
+    import dataclasses
+    cfg = dataclasses.replace(reduced(get_config("bitnet-1.3b")),
+                              n_layers=4, scan_layers=True)
+    p = jax.eval_shape(lambda: MD.init_params(jax.random.PRNGKey(0), cfg))
+    s = sharding.param_specs(p)
+    assert s["layers"]["stacked"][0]["attn"]["wq"]["w"] == \
+        P(None, None, "model")
+
+
+def test_zero1_divisibility():
+    p, _ = _specs("bitnet-1.3b")
+    specs = sharding.param_specs(p)
+    z = sharding.zero1_specs(specs, p, data_size=16)
+    leaves = jax.tree_util.tree_flatten_with_path(
+        z, is_leaf=lambda x: isinstance(x, P))[0]
+    shapes = jax.tree_util.tree_flatten_with_path(p)[0]
+    for (kp, spec), (_, shp) in zip(leaves, shapes):
+        for i, ax in enumerate(spec):
+            if ax == "data":
+                assert shp.shape[i] % 16 == 0, (kp, spec, shp.shape)
+
+
+def test_serving_params_shardable():
+    cfg = reduced(get_config("qwen3-moe-30b-a3b"))
+    sp = jax.eval_shape(lambda: MD.export_serving(
+        MD.init_params(jax.random.PRNGKey(0), cfg), cfg))
+    specs = sharding.param_specs(sp)
+    # packed expert weights shard on the expert axis
+    blk = specs["layers"]["tail"][0]["moe"]
+    assert blk["experts_gate"]["packed"] == P("model", None, None)

@@ -1,0 +1,63 @@
+"""Unit + property tests for Q_1.58 / Q_int8 quantizers (paper Sec. III)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ternary as tq
+
+
+def test_values_are_ternary(rng):
+    w = jnp.asarray(rng.standard_normal((64, 48)), jnp.float32)
+    tw = tq.ternary_quantize(w)
+    assert set(np.unique(np.asarray(tw.values))) <= {-1, 0, 1}
+    assert tw.values.dtype == jnp.int8
+
+
+def test_absmean_scale(rng):
+    w = jnp.asarray(rng.standard_normal((128, 32)), jnp.float32)
+    np.testing.assert_allclose(float(tq.absmean_scale(w)),
+                               float(jnp.mean(jnp.abs(w))) + 1e-6, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 64), st.integers(1, 32))
+def test_dequant_error_bounded(seed, k, n):
+    """round-to-nearest: |W/γ - q| <= 0.5 wherever |W/γ| <= 1.5."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    tw = tq.ternary_quantize(w)
+    ratio = np.asarray(w / tw.scale)
+    q = np.asarray(tw.values, np.float32)
+    inner = np.abs(ratio) <= 1.5
+    assert np.all(np.abs(ratio - q)[inner] <= 0.5 + 1e-5)
+
+
+def test_ste_gradient_is_identity(rng):
+    w = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    g = jax.grad(lambda w_: jnp.sum(tq.ternary_fake_quant(w_) * 3.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+    x = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    gx = jax.grad(lambda x_: jnp.sum(tq.int8_fake_quant(x_) * 2.0))(x)
+    np.testing.assert_allclose(np.asarray(gx), 2.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_int8_roundtrip_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((8, 64)) * 5.0, jnp.float32)
+    qa = tq.int8_quantize(x)
+    back = tq.int8_dequantize(qa)
+    # error bounded by half a quantization step per element
+    step = np.asarray(qa.scale)
+    assert np.all(np.abs(np.asarray(back - x)) <= 0.51 * step + 1e-6)
+
+
+def test_ternary_matmul_ref(rng):
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    tw = tq.ternary_quantize(w)
+    x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    y = tq.ternary_matmul_ref(x, tw.values, tw.scale)
+    ref = np.asarray(x) @ (np.asarray(tw.values, np.float32) * float(tw.scale))
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-5)

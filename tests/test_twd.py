@@ -1,0 +1,54 @@
+"""TWD base-3 packing (Sec. III-E): roundtrips, density, alignment."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import twd
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 333), st.integers(1, 17))
+def test_roundtrip_exact(seed, k, n):
+    rng = np.random.default_rng(seed)
+    trits = rng.integers(-1, 2, size=(k, n)).astype(np.int8)
+    packed = twd.pack_ternary(trits)
+    out = np.asarray(twd.unpack_ternary(jnp.asarray(packed), k))
+    assert np.array_equal(out, trits)
+    out2 = np.asarray(twd.unpack_ternary_arith(jnp.asarray(packed), k))
+    assert np.array_equal(out2, trits)
+
+
+def test_64b_80b_ratio():
+    # 320 trits: 64 packed bytes vs 80 int2 bytes — the paper's block
+    assert twd.packed_dim(320) == 64
+    assert twd.compression_ratio_vs_int2(320) == 0.8
+
+
+def test_bits_per_weight():
+    k = 10_000
+    bits = twd.packed_dim(k) * 8 / k
+    assert 1.58 <= bits <= 1.62
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 2000))
+def test_row_align(seed, k):
+    rng = np.random.default_rng(seed)
+    trits = rng.integers(-1, 2, size=(k, 4)).astype(np.int8)
+    packed = twd.pack_ternary(trits, row_align=16)
+    assert packed.shape[0] % 16 == 0
+    out = np.asarray(twd.unpack_ternary(jnp.asarray(packed), k))
+    assert np.array_equal(out, trits)
+
+
+def test_invalid_bytes_decode_to_zero():
+    bad = jnp.full((2, 3), 250, jnp.uint8)  # >= 243: invalid encodings
+    out = np.asarray(twd.unpack_ternary(bad, 10))
+    assert np.all(out == 0)
+
+
+def test_decode_lut_matches_arith(rng):
+    packed = jnp.asarray(rng.integers(0, 243, size=(40, 8)), jnp.uint8)
+    a = np.asarray(twd.unpack_ternary(packed, 200))
+    b = np.asarray(twd.unpack_ternary_arith(packed, 200))
+    assert np.array_equal(a, b)
