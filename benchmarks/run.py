@@ -18,6 +18,7 @@ MODULES = [
     "bench_table2_accuracy",
     "bench_table3_gla",
     "bench_fig11_ablation",
+    "bench_serve_engine",
 ]
 
 

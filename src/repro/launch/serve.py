@@ -1,20 +1,19 @@
-"""Serving driver: prefill/decode step builders + a batched-request demo.
+"""Serving driver: pjit-able step builders + a CLI over repro.serve.
 
 `make_prefill_step` / `make_decode_step` are the pjit-able pure steps the
-dry-run lowers at production shapes; `main` runs an actual small-model
-serving session on CPU: export ternary weights (TWD packing), prefill a
-batch of prompts through the LPSA streaming dataflow, then generate tokens
-greedily from the ring caches.
+dry-run lowers at production shapes.  `main` is now a thin CLI over
+`repro.serve.ServeEngine`: export ternary weights (TWD packing), submit a
+staggered trace of generation requests, and let the continuous-batching
+engine prefill/decode them through per-sequence KV state.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch bitnet-1.3b --reduced \
-      --prompt-len 64 --gen 32 --batch 4
+      --prompt-len 64 --gen 32 --requests 4 --stagger 4 --temperature 0.8
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,8 +22,9 @@ import numpy as np
 from repro.configs import get_config, reduced as reduced_cfg
 from repro.models import model as MD
 from repro.models.transformer import Runtime
+from repro.serve import Request, ServeEngine
 
-__all__ = ["make_prefill_step", "make_decode_step", "main"]
+__all__ = ["make_prefill_step", "make_decode_step", "build_engine", "main"]
 
 
 def make_prefill_step(cfg, rt: Runtime, *, max_len: int):
@@ -39,13 +39,41 @@ def make_decode_step(cfg, rt: Runtime):
     return decode_step
 
 
+def build_engine(cfg, rt: Runtime, *, max_slots: int, max_len: int,
+                 top_k: int = 0, seed: int = 0,
+                 policy: str = "continuous") -> ServeEngine:
+    """Init params, export TWD serving weights, wrap them in a ServeEngine."""
+    params = MD.init_params(jax.random.PRNGKey(seed), cfg)
+    sparams = MD.export_serving(params, cfg)
+    nbytes = sum(x.nbytes for x in jax.tree.leaves(sparams))
+    mbytes = sum(x.nbytes for x in jax.tree.leaves(params))
+    print(f"[serve] {cfg.name}: serving weights {nbytes/1e6:.1f} MB "
+          f"(master {mbytes/1e6:.1f} MB, {mbytes/max(nbytes,1):.1f}x TWD+quant)")
+    return ServeEngine(cfg, sparams, rt, max_slots=max_slots, max_len=max_len,
+                       top_k=top_k, seed=seed, policy=policy)
+
+
+def _make_prompt(cfg, rng, length: int):
+    if MD.uses_embeds(cfg):
+        return jnp.asarray(rng.standard_normal((length, cfg.d_model)),
+                           jnp.float32)
+    return np.asarray(rng.integers(0, cfg.vocab, (length,)), np.int32)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="bitnet-1.3b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--stagger", type=int, default=0,
+                    help="virtual decode steps between request arrivals")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--policy", choices=["continuous", "wave"],
+                    default="continuous")
     ap.add_argument("--no-sparse", action="store_true",
                     help="full attention + full KV cache (naive baseline)")
     ap.add_argument("--seed", type=int, default=0)
@@ -57,50 +85,27 @@ def main(argv=None):
     rt = Runtime(serve_sparse=not args.no_sparse)
     max_len = args.prompt_len + args.gen
 
-    params = MD.init_params(jax.random.PRNGKey(args.seed), cfg)
-    sparams = MD.export_serving(params, cfg)
-    nbytes = sum(x.nbytes for x in jax.tree.leaves(sparams))
-    mbytes = sum(x.nbytes for x in jax.tree.leaves(params))
-    print(f"[serve] {cfg.name}: serving weights {nbytes/1e6:.1f} MB "
-          f"(master {mbytes/1e6:.1f} MB, {mbytes/max(nbytes,1):.1f}x TWD+quant)")
-
-    prefill = jax.jit(make_prefill_step(cfg, rt, max_len=max_len))
-    decode = jax.jit(make_decode_step(cfg, rt))
+    eng = build_engine(cfg, rt, max_slots=args.slots, max_len=max_len,
+                       top_k=args.top_k, seed=args.seed, policy=args.policy)
 
     rng = np.random.default_rng(args.seed)
-    if MD.uses_embeds(cfg):
-        prompts = jnp.asarray(rng.standard_normal(
-            (args.batch, args.prompt_len, cfg.d_model)), jnp.float32)
-    else:
-        prompts = jnp.asarray(rng.integers(
-            0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+    for i in range(args.requests):
+        eng.submit(Request(uid=i, prompt=_make_prompt(cfg, rng, args.prompt_len),
+                           max_new_tokens=args.gen,
+                           temperature=args.temperature,
+                           arrival=i * args.stagger))
+    results = eng.run()
 
-    t0 = time.perf_counter()
-    logits, caches = prefill(sparams, prompts)
-    logits.block_until_ready()
-    t_pre = time.perf_counter() - t0
-    print(f"[serve] prefill {args.batch}x{args.prompt_len}: {t_pre*1e3:.1f} ms")
-
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        t = jnp.array(args.prompt_len + i)
-        if MD.uses_embeds(cfg):
-            step_in = jnp.take(sparams["embed"], tok, axis=0)[:, None, :].astype(jnp.float32)[:, 0]
-            step_in = step_in[:, None, :]
-        else:
-            step_in = tok
-        logits, caches = decode(sparams, caches, step_in, t)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(out[-1])
-    t_dec = time.perf_counter() - t0
-    toks = jnp.stack(out, axis=1)
-    print(f"[serve] decode {args.gen-1} steps: {t_dec*1e3:.1f} ms "
-          f"({(args.gen-1)*args.batch/max(t_dec,1e-9):.1f} tok/s)")
-    print(f"[serve] sample output ids: {np.asarray(toks[0])[:16].tolist()}")
-    return toks
+    st = eng.stats
+    print(f"[serve] {st.decode_steps} decode steps, slot utilization "
+          f"{st.slot_utilization:.2f}, {st.generated_tokens} tokens in "
+          f"{st.wall_seconds:.2f}s "
+          f"({st.generated_tokens/max(st.wall_seconds,1e-9):.1f} tok/s)")
+    for uid in sorted(results):
+        r = results[uid]
+        print(f"[serve] req {uid}: ttft {r.ttft_steps} steps, latency "
+              f"{r.latency_steps} steps, ids {r.tokens[:8].tolist()}...")
+    return results
 
 
 if __name__ == "__main__":

@@ -77,9 +77,12 @@ def flash_masked(q, k, v, q_pos, k_pos, *, sink: int, window: int,
                  softcap: float | None = None, kv_chunk: int = 512) -> jax.Array:
     """Differentiable chunked flash attention with the LPSA mask family.
 
-    q: (B, Lq, Hq, D); k, v: (B, Lk, Hkv, D); q_pos (Lq,), k_pos (Lk,).
-    Scans KV chunks with an online softmax; per-step live memory is
-    O(Lq * kv_chunk) — the XLA analogue of the Pallas kernel.
+    q: (B, Lq, Hq, D); k, v: (B, Lk, Hkv, D); q_pos (Lq,) or per-sequence
+    (B, Lq); k_pos (Lk,) or (B, Lk).  Per-sequence positions let each batch
+    row sit at its own decode depth (continuous batching); 1-D positions
+    broadcast to the whole batch (lock-step).  Scans KV chunks with an
+    online softmax; per-step live memory is O(Lq * kv_chunk) — the XLA
+    analogue of the Pallas kernel.
     """
     b, lq, hq, d = q.shape
     _, lk, hkv, _ = k.shape
@@ -88,25 +91,28 @@ def flash_masked(q, k, v, q_pos, k_pos, *, sink: int, window: int,
     if lk % c:
         c = lk  # fall back to a single chunk for awkward cache sizes
     scale = d ** -0.5
+    q_pos = jnp.broadcast_to(jnp.atleast_2d(q_pos), (b, lq))
+    k_pos = jnp.broadcast_to(jnp.atleast_2d(k_pos), (b, lk))
     qh = jnp.swapaxes(q, 1, 2).astype(jnp.float32)       # (B,Hq,Lq,D)
     kc = k.reshape(b, lk // c, c, hkv, d).transpose(1, 0, 3, 2, 4)
     vc = v.reshape(b, lk // c, c, hkv, d).transpose(1, 0, 3, 2, 4)
-    kpc = k_pos.reshape(lk // c, c)
+    kpc = k_pos.reshape(b, lk // c, c).swapaxes(0, 1)    # (N, B, c)
 
     def step(carry, blk):
         m, l, acc = carry
-        kb, vb, kp = blk                                  # (B,Hkv,c,D), (c,)
+        kb, vb, kp = blk                                  # (B,Hkv,c,D), (B,c)
         kb = jnp.repeat(kb, n_rep, axis=1).astype(jnp.float32)
         vb = jnp.repeat(vb, n_rep, axis=1).astype(jnp.float32)
         s = jnp.einsum("bhqd,bhkd->bhqk", qh, kb) * scale
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
-        mask = lpsa_lib.lpsa_allowed(q_pos[:, None], kp[None, :], sink, window)
-        mask = mask & (kp >= 0)[None, :]
-        s = jnp.where(mask[None, None], s, NEG_INF)
+        mask = lpsa_lib.lpsa_allowed(q_pos[:, :, None], kp[:, None, :],
+                                     sink, window)
+        mask = mask & (kp >= 0)[:, None, :]               # (B,Lq,c)
+        s = jnp.where(mask[:, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
         m_safe = jnp.where(m_new <= NEG_INF, 0.0, m_new)
-        p = jnp.where(mask[None, None], jnp.exp(s - m_safe), 0.0)
+        p = jnp.where(mask[:, None], jnp.exp(s - m_safe), 0.0)
         alpha = jnp.where(m <= NEG_INF, 0.0, jnp.exp(m - m_safe))
         l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
         acc_new = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p, vb)
@@ -167,20 +173,25 @@ def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                 kernel_mode: str = "ref"):
     """One-token decode.  x: (B, 1, D); cache from models.kvcache.
 
-    Returns (y (B,1,D), new_cache).
+    t: scalar (lock-step: all sequences at the same position) or (B,)
+    per-sequence positions (continuous batching: each slot at its own
+    decode depth).  Returns (y (B,1,D), new_cache).
     """
     from repro.models import kvcache  # local import to avoid cycle
 
     b = x.shape[0]
     sink, window = kind_sink_window(cfg, kind, serve_sparse)
     q, k, v = qkv_project(p, cfg, x, kernel_mode=kernel_mode)
-    pos = t[None] if t.ndim == 0 else t
+    t = jnp.asarray(t, jnp.int32)
+    if t.ndim == 0:
+        t = jnp.broadcast_to(t, (b,))
+    pos = t[:, None]                                     # (B, 1)
     rp = _rope_fn(cfg)
     q, k = rp(q, pos), rp(k, pos)
     ring = sink < FULL_SINK
     cache = kvcache.attn_write(cache, k, v, t, sink=sink, window=window,
                                ring=ring)
-    k_all, v_all, k_pos = kvcache.attn_read(cache)
+    k_all, v_all, k_pos = kvcache.attn_read(cache)       # k_pos (B, S)
     o = flash_masked(q, k_all, v_all, pos, k_pos, sink=sink, window=window,
                      softcap=cfg.attn_softcap,
                      kv_chunk=min(512, k_all.shape[1]))

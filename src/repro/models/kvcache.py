@@ -33,33 +33,41 @@ def init_attn_full(cfg: ModelConfig, batch: int, max_len: int,
                    dtype=jnp.bfloat16) -> dict:
     shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
     return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
-            "pos": jnp.full((max_len,), -1, jnp.int32)}
+            "pos": jnp.full((batch, max_len), -1, jnp.int32)}
 
 
 def init_attn_ring(cfg: ModelConfig, batch: int, sink: int, window: int,
                    dtype=jnp.bfloat16) -> dict:
     shp = (batch, sink + window, cfg.n_kv_heads, cfg.head_dim_)
     return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
-            "pos": jnp.full((sink + window,), -1, jnp.int32)}
+            "pos": jnp.full((batch, sink + window), -1, jnp.int32)}
 
 
 def attn_write(cache: dict, k_new: jax.Array, v_new: jax.Array, t: jax.Array,
                *, sink: int, window: int, ring: bool) -> dict:
-    """Insert one token's K/V at absolute position t (same t across batch)."""
-    slot = decode_slot(t, sink, window) if ring else t
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
-                                            k_new.astype(cache["k"].dtype),
-                                            slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
-                                            v_new.astype(cache["v"].dtype),
-                                            slot, axis=1)
-    pos = jax.lax.dynamic_update_slice(cache["pos"], t[None].astype(jnp.int32),
-                                       (slot,))
+    """Insert one token's K/V per sequence at absolute positions t.
+
+    t: (B,) int32 — each sequence's own absolute position (a scalar t
+    broadcasts, preserving the old lock-step behaviour).  Slots are computed
+    per sequence (core.lpsa.decode_slot is elementwise over t), so sequences
+    at different decode depths coexist in one batched cache.  A full-cache
+    write past max_len is dropped (its slot keeps pos = -1 and stays
+    masked) rather than clobbering the last slot.
+    """
+    b = cache["k"].shape[0]
+    t = jnp.asarray(t, jnp.int32)
+    if t.ndim == 0:
+        t = jnp.broadcast_to(t, (b,))
+    slot = decode_slot(t, sink, window) if ring else t          # (B,)
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    pos = cache["pos"].at[bidx, slot].set(t)
     return {"k": k, "v": v, "pos": pos}
 
 
 def attn_read(cache: dict):
-    """-> (k (B,S,Hkv,Dh), v, k_pos (S,)); invalid slots have pos = -1."""
+    """-> (k (B,S,Hkv,Dh), v, k_pos (B,S)); invalid slots have pos = -1."""
     return cache["k"], cache["v"], cache["pos"]
 
 
@@ -89,6 +97,9 @@ def ring_from_stream(cfg: ModelConfig, state, *, sink: int, window: int) -> dict
     v = jnp.concatenate([v_sink.astype(dtype), v_ring], axis=1)
     pos = jnp.concatenate([jnp.where(sink_valid, sink_pos, -1),
                            jnp.where(ring_valid, p, -1)]).astype(jnp.int32)
+    # per-sequence position map: prefill runs the whole batch in lock-step,
+    # so every sequence starts from the same slot->position assignment
+    pos = jnp.broadcast_to(pos[None], (b, pos.shape[0]))
     return {"k": k, "v": v, "pos": pos}
 
 

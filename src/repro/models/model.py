@@ -121,7 +121,9 @@ def init_caches(p_or_none, cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(p: dict, cfg: ModelConfig, caches: dict, token_or_embed,
                 t, rt: Runtime = Runtime()):
-    """One decode step at position t.  -> (logits (B, V), new caches)."""
+    """One decode step.  t: scalar position (lock-step batch) or (B,)
+    per-sequence positions (continuous batching).  -> (logits (B, V),
+    new caches)."""
     if token_or_embed.ndim == 1:
         token_or_embed = token_or_embed[:, None]
     x = _inputs_to_x(p, cfg, token_or_embed)

@@ -207,7 +207,7 @@ def block_prefill(bp: dict, cfg: ModelConfig, x: jax.Array, kind: str,
             full = KV.init_attn_full(cfg, batch, max_len, dt)
             kpad = full["k"].at[:, :k.shape[1]].set(k.astype(dt))
             vpad = full["v"].at[:, :v.shape[1]].set(v.astype(dt))
-            ppad = full["pos"].at[:k.shape[1]].set(pos.astype(jnp.int32))
+            ppad = full["pos"].at[:, :k.shape[1]].set(pos.astype(jnp.int32))
             cache = {"k": kpad, "v": vpad, "pos": ppad}
         x = x + y
         x = x + _mixer_ffn(bp, cfg, L.rmsnorm(bp["norm2"], x), rt)
@@ -229,6 +229,8 @@ def block_prefill(bp: dict, cfg: ModelConfig, x: jax.Array, kind: str,
 
 def block_decode(bp: dict, cfg: ModelConfig, x: jax.Array, kind: str,
                  cache, t, shared, rt: Runtime):
+    """One-token decode; t is scalar (lock-step) or (B,) per-sequence
+    positions (continuous batching) — recurrent mixers are position-free."""
     km = rt.kernel_mode
     if kind in ("attn", "local"):
         y, cache = A.attn_decode(_attn_params(bp, shared), cfg,

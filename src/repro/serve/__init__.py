@@ -1,0 +1,19 @@
+"""Continuous-batching serving engine (slot scheduler + samplers).
+
+The serving counterpart of the paper's low-batch real-time claim: a fixed
+``max_slots``-wide jitted decode step (static shapes) whose slots are
+admitted, generated, and retired independently — a request can prefill into
+a free slot while the other slots keep decoding, because the KV caches
+carry per-sequence positions (models/kvcache.py).
+
+Modules:
+  scheduler — Request + arrival/priority queue (FifoScheduler)
+  sampler   — greedy / temperature / top-k next-token sampling
+  engine    — ServeEngine: slot state machine + the jitted decode step
+"""
+from repro.serve.engine import EngineStats, RequestResult, ServeEngine
+from repro.serve.sampler import make_sampler, sample_token
+from repro.serve.scheduler import FifoScheduler, Request
+
+__all__ = ["ServeEngine", "EngineStats", "RequestResult",
+           "FifoScheduler", "Request", "make_sampler", "sample_token"]

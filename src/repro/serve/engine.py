@@ -1,0 +1,388 @@
+"""ServeEngine: slot-based continuous batching over per-sequence KV caches.
+
+The engine owns one decode-cache pytree sized for ``max_slots`` sequences
+and runs ONE jitted decode step for the whole batch every tick — the
+decode step's shapes are static, so it never recompiles as requests come
+and go (admission prefill compiles once per pack-aligned prefix length,
+a set bounded by max_len / chunk; `reset_clock` lets benchmarks warm
+those caches before a timed replay).  Per-slot lifecycle:
+
+  FREE ──admit──> PREFILL ──tail consumed──> DECODE ──eos/max──> FREE
+
+Admission prefills the longest pack-aligned prompt *prefix* through the
+LPSA streaming dataflow (batch=1) and writes the resulting layer caches
+into the slot's rows; the remaining prompt tail is fed token-by-token
+through the shared batched decode step while the other slots keep
+generating (token-level admission, Orca-style).  Because every cache row
+carries its own position cursor (models/kvcache.attn_write with t: (B,)),
+a slot at prompt position 7 coexists with a slot at decode position 900.
+
+Time is virtual: 1 unit == one batched decode step.  Requests carry
+arrival times in the same units so traces replay deterministically, and a
+request's tokens are bitwise independent of its batch-mates (per-row
+attention masks + per-(uid, token) sampling keys) — see
+tests/test_serve_engine.py for the batch-invariance check.
+
+``policy="wave"`` degrades the same machinery to lock-step gang
+scheduling (admit only when ALL slots are free, barrier until all
+finish): the baseline the benchmarks compare against.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import model as MD
+from repro.models.transformer import Runtime
+from repro.serve.sampler import make_sampler, sample_token
+from repro.serve.scheduler import FifoScheduler, Request
+
+__all__ = ["ServeEngine", "EngineStats", "RequestResult"]
+
+FREE, PREFILL, DECODE = 0, 1, 2
+
+
+@dataclass
+class RequestResult:
+    uid: int
+    tokens: np.ndarray            # generated ids (eos included when hit)
+    prompt_len: int
+    arrival: int                  # vtime units (1 = one batched decode step)
+    admit_vtime: int
+    first_token_vtime: int
+    finish_vtime: int
+    admitted_with_active: int = 0  # slots already mid-stream at admission
+                                   # (admitted in an earlier tick)
+
+    @property
+    def latency_steps(self) -> int:
+        return self.finish_vtime - self.arrival
+
+    @property
+    def ttft_steps(self) -> int:
+        return self.first_token_vtime - self.arrival
+
+
+@dataclass
+class EngineStats:
+    max_slots: int = 0
+    decode_steps: int = 0         # batched step invocations
+    active_slot_steps: int = 0    # sum over steps of |active slots|
+    generated_tokens: int = 0     # sampled tokens delivered to requests
+    prefill_tokens: int = 0       # prompt tokens absorbed via batch-1 prefill
+    wall_seconds: float = 0.0
+
+    @property
+    def slot_utilization(self) -> float:
+        """Mean fraction of decode-batch rows doing useful work."""
+        return self.active_slot_steps / max(1, self.decode_steps
+                                            * max(1, self.max_slots))
+
+
+class _Slot:
+    __slots__ = ("state", "req", "input_tok", "input_x", "input_pos",
+                 "tail", "tail_idx", "out", "admit_vtime", "first_tok_vtime",
+                 "admitted_with_active")
+
+    def __init__(self):
+        self.state = FREE
+        self.req = None
+
+
+class ServeEngine:
+    """Continuous-batching engine over an exported serving-params tree.
+
+    cfg/sparams/rt as elsewhere in the repo; ``max_len`` bounds prompt +
+    generation when any layer keeps a full (non-ring) cache.  ``top_k`` is
+    static for the jitted step (0 = unrestricted); per-request temperature
+    is dynamic.  ``policy``: "continuous" (default) or "wave" (lock-step
+    gang-scheduling baseline).
+    """
+
+    def __init__(self, cfg: ModelConfig, sparams: dict,
+                 rt: Runtime = Runtime(), *, max_slots: int = 4,
+                 max_len: int = 512, top_k: int = 0, seed: int = 0,
+                 policy: str = "continuous"):
+        if policy not in ("continuous", "wave"):
+            raise ValueError(f"unknown admission policy {policy!r}")
+        self.cfg, self.sparams, self.rt = cfg, sparams, rt
+        self.max_slots, self.max_len = max_slots, max_len
+        self.policy = policy
+        self.scheduler = FifoScheduler()
+        self.stats = EngineStats(max_slots=max_slots)
+        self.vtime = 0
+        self._uses_embeds = MD.uses_embeds(cfg)
+        self._cache_dtype = jnp.dtype(cfg.dtype)
+        kinds = cfg.layer_kinds()
+        sw = [A.kind_sink_window(cfg, k, rt.serve_sparse) for k in kinds
+              if k in ("attn", "local")]
+        self._has_full = any(s >= A.FULL_SINK for s, _ in sw)
+        self._has_stream = any(s < A.FULL_SINK for s, _ in sw)
+        # streaming prefill consumes whole packs; prompts prefill their
+        # longest pack-aligned prefix and decode the tail token-by-token
+        self._chunk = (cfg.lpsa.chunk if cfg.lpsa else 256) \
+            if self._has_stream else 1
+
+        self.caches = MD.init_caches(None, cfg, max_slots, max_len, rt,
+                                     self._cache_dtype)
+        self._empty1 = MD.init_caches(None, cfg, 1, max_len, rt,
+                                      self._cache_dtype)
+        self._slots = [_Slot() for _ in range(max_slots)]
+        self._results: dict[int, RequestResult] = {}
+        self._pending_uids: set[int] = set()
+        self._base_key = jax.random.PRNGKey(seed)
+        self._sampler = make_sampler(top_k)
+        self._top_k = top_k
+
+        self._prefill = jax.jit(
+            lambda sp, x: MD.prefill(sp, cfg, x, rt, max_len=max_len))
+        self._step = jax.jit(self._step_fn, donate_argnums=(1,))
+        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+        self._sample1 = jax.jit(
+            lambda lg, uid, temp: sample_token(
+                lg, self._fold_key(uid, jnp.int32(0)), temp, top_k))
+
+    # -- jitted pieces ----------------------------------------------------
+
+    def _fold_key(self, uid, counter):
+        return jax.random.fold_in(jax.random.fold_in(self._base_key, uid),
+                                  counter)
+
+    def _step_fn(self, sparams, caches, tok, t, temps, uids, counters,
+                 active, forced, forced_x):
+        """One batched decode tick: embed -> decode_step -> sample.
+
+        tok (B,) int32 inputs; t (B,) per-sequence positions; forced/
+        forced_x override the input with raw prompt embeddings for
+        stub-frontend models still absorbing their prompt tail.
+        """
+        if self._uses_embeds:
+            x = jnp.take(sparams["embed"], tok, axis=0).astype(jnp.float32)
+            x = jnp.where(forced[:, None], forced_x, x)[:, None, :]
+            logits, caches = MD.decode_step(sparams, self.cfg, caches, x, t,
+                                            self.rt)
+        else:
+            logits, caches = MD.decode_step(sparams, self.cfg, caches, tok, t,
+                                            self.rt)
+        keys = jax.vmap(self._fold_key)(uids, counters)
+        next_tok = self._sampler(logits, keys, temps)
+        next_tok = jnp.where(active, next_tok, 0)
+        return next_tok, caches
+
+    def _insert_fn(self, big, small, slot):
+        """Overwrite one slot's rows with a batch-1 cache pytree."""
+        stacked = None
+        if big["stacked"] is not None:
+            stacked = jax.tree.map(lambda bg, sm: bg.at[:, slot].set(
+                sm[:, 0].astype(bg.dtype)), big["stacked"], small["stacked"])
+        tail = jax.tree.map(lambda bg, sm: bg.at[slot].set(
+            sm[0].astype(bg.dtype)), big["tail"], small["tail"])
+        return {"stacked": stacked, "tail": tail}
+
+    # -- public API -------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.prompt_len < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.uid}: max_new_tokens must be >= 1")
+        if self._has_full and req.prompt_len + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt {req.prompt_len} + gen "
+                f"{req.max_new_tokens} exceeds max_len {self.max_len} "
+                f"(a full-cache layer is active)")
+        # duplicate uids among in-flight work would collide in the results
+        # dict AND share a sampling-key stream (correlated draws)
+        in_flight = {s.req.uid for s in self._slots if s.req is not None}
+        if req.uid in in_flight or req.uid in self._pending_uids \
+                or req.uid in self._results:
+            raise ValueError(f"request uid {req.uid} already in flight")
+        self._pending_uids.add(req.uid)
+        self.scheduler.add(req)
+
+    @property
+    def num_active(self) -> int:
+        return sum(s.state != FREE for s in self._slots)
+
+    def reset_clock(self) -> None:
+        """Zero the virtual clock and stats between traces (caches and jit
+        compilation caches survive — use to warm up before a timed replay).
+        Only valid when the engine is drained."""
+        if self.num_active or self.scheduler:
+            raise RuntimeError("reset_clock on a non-drained engine")
+        self.vtime = 0
+        self.stats = EngineStats(max_slots=self.max_slots)
+
+    def timed_replay(self, trace) -> dict[int, RequestResult]:
+        """Replay `trace` twice — once to pay the XLA compiles, then timed
+        with warm caches — and return the timed run's results (wall-clock
+        stats reflect only the second replay)."""
+        for r in trace:
+            self.submit(r)
+        self.run()
+        self.reset_clock()
+        for r in trace:
+            self.submit(r)
+        return self.run()
+
+    def run(self) -> dict[int, RequestResult]:
+        """Drain the queue; returns uid -> RequestResult."""
+        t0 = time.perf_counter()
+        while self.scheduler or self.num_active:
+            self._admit_ready()
+            if not self.num_active:
+                nxt = self.scheduler.next_arrival()
+                if nxt is None:   # nothing queued, nothing active
+                    break
+                self.vtime = max(self.vtime, nxt)   # idle fast-forward
+                continue
+            self.step_decode()
+        self.stats.wall_seconds += time.perf_counter() - t0
+        out, self._results = self._results, {}
+        return out
+
+    # -- admission --------------------------------------------------------
+
+    def _admit_ready(self) -> None:
+        if self.policy == "wave" and self.num_active:
+            return
+        for i, slot in enumerate(self._slots):
+            if slot.state != FREE:
+                continue
+            req = self.scheduler.pop_ready(self.vtime)
+            if req is None:
+                return
+            self._admit(i, req)
+
+    def _admit(self, idx: int, req: Request) -> None:
+        slot = self._slots[idx]
+        p = req.prompt_len
+        prefix = (p // self._chunk) * self._chunk
+        self._pending_uids.discard(req.uid)
+        # mid-decode admission metric: slots already mid-stream (admitted in
+        # an EARLIER tick) — same-tick co-admissions don't count
+        slot.admitted_with_active = sum(
+            1 for s2 in self._slots
+            if s2.state != FREE and s2.admit_vtime < self.vtime)
+        slot.req = req
+        slot.admit_vtime = self.vtime
+        slot.out = []
+        slot.input_x = None
+        if prefix > 0:
+            logits, small = self._prefill(self.sparams,
+                                          jnp.asarray(req.prompt)[None, :prefix])
+            self.stats.prefill_tokens += prefix
+        else:
+            logits, small = None, self._empty1
+        self.caches = self._insert(self.caches, small, jnp.int32(idx))
+        if prefix == p:
+            # prompt fully absorbed: first token comes from prefill logits
+            tok = int(self._sample1(logits[0], jnp.int32(req.uid),
+                                    jnp.float32(req.temperature)))
+            slot.state = DECODE
+            slot.first_tok_vtime = self.vtime
+            slot.out.append(tok)
+            slot.input_tok = tok
+            slot.input_pos = p
+            self.stats.generated_tokens += 1
+            if self._finished(slot, tok):
+                self._retire(idx)
+        else:
+            slot.state = PREFILL
+            slot.tail = req.prompt[prefix:]
+            slot.tail_idx = 1
+            slot.input_pos = prefix
+            if self._uses_embeds:
+                slot.input_tok = 0
+                slot.input_x = np.asarray(slot.tail[0], np.float32)
+            else:
+                slot.input_tok = int(slot.tail[0])
+
+    # -- the decode tick --------------------------------------------------
+
+    def step_decode(self) -> None:
+        b = self.max_slots
+        tok = np.zeros((b,), np.int32)
+        t = np.zeros((b,), np.int32)
+        temps = np.zeros((b,), np.float32)
+        uids = np.zeros((b,), np.int32)
+        counters = np.zeros((b,), np.int32)
+        active = np.zeros((b,), bool)
+        forced = np.zeros((b,), bool)
+        d_model = self.cfg.d_model
+        forced_x = np.zeros((b, d_model), np.float32)
+        for i, s in enumerate(self._slots):
+            if s.state == FREE:
+                continue
+            active[i] = True
+            tok[i] = s.input_tok
+            t[i] = s.input_pos
+            temps[i] = s.req.temperature
+            uids[i] = s.req.uid
+            counters[i] = len(s.out)
+            if s.input_x is not None:
+                forced[i] = True
+                forced_x[i] = s.input_x
+
+        next_tok, self.caches = self._step(
+            self.sparams, self.caches, jnp.asarray(tok), jnp.asarray(t),
+            jnp.asarray(temps), jnp.asarray(uids), jnp.asarray(counters),
+            jnp.asarray(active), jnp.asarray(forced), jnp.asarray(forced_x))
+        next_tok = np.asarray(next_tok)
+
+        self.stats.decode_steps += 1
+        self.stats.active_slot_steps += int(active.sum())
+        self.vtime += 1
+
+        for i, s in enumerate(self._slots):
+            if s.state == PREFILL:
+                if s.tail_idx < len(s.tail):
+                    s.input_pos += 1
+                    nxt = s.tail[s.tail_idx]
+                    if self._uses_embeds:
+                        s.input_x = np.asarray(nxt, np.float32)
+                    else:
+                        s.input_tok = int(nxt)
+                    s.tail_idx += 1
+                else:
+                    # last prompt token went in this tick -> first sample
+                    s.state = DECODE
+                    s.input_x = None
+                    s.first_tok_vtime = self.vtime
+                    self._deliver(i, int(next_tok[i]))
+            elif s.state == DECODE:
+                self._deliver(i, int(next_tok[i]))
+
+    def _deliver(self, idx: int, tok: int) -> None:
+        s = self._slots[idx]
+        s.out.append(tok)
+        s.input_tok = tok
+        s.input_pos = s.req.prompt_len + len(s.out) - 1
+        self.stats.generated_tokens += 1
+        if self._finished(s, tok):
+            self._retire(idx)
+
+    def _finished(self, s: _Slot, tok: int) -> bool:
+        return (len(s.out) >= s.req.max_new_tokens
+                or (s.req.eos_id is not None and tok == s.req.eos_id))
+
+    def _retire(self, idx: int) -> None:
+        s = self._slots[idx]
+        r = s.req
+        self._results[r.uid] = RequestResult(
+            uid=r.uid, tokens=np.asarray(s.out, np.int32),
+            prompt_len=r.prompt_len, arrival=r.arrival,
+            admit_vtime=s.admit_vtime, first_token_vtime=s.first_tok_vtime,
+            finish_vtime=self.vtime,
+            admitted_with_active=s.admitted_with_active)
+        s.state = FREE
+        s.req = None
+        s.input_x = None
+        s.tail = None

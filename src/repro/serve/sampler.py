@@ -1,0 +1,40 @@
+"""Next-token samplers: greedy / temperature / top-k.
+
+Replaces the hardcoded `argmax` of the old serving drivers.  Sampling is
+deterministic per (request uid, token index): the engine derives each
+row's PRNG key by folding the request uid and its generated-token counter
+into a base key, so a request's tokens do not depend on which other
+requests share the decode batch (batch invariance).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_token", "make_sampler"]
+
+
+def sample_token(logits: jax.Array, key: jax.Array, temperature: jax.Array,
+                 top_k: int = 0) -> jax.Array:
+    """One row: logits (V,) -> token id ().
+
+    temperature <= 0 selects greedy argmax; otherwise softmax sampling at
+    `temperature`, restricted to the `top_k` highest logits when top_k > 0
+    (static — it shapes the lowered program).
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if top_k and top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    scaled = logits / jnp.maximum(temperature, 1e-6)
+    drawn = jax.random.categorical(key, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0, drawn, greedy)
+
+
+def make_sampler(top_k: int = 0):
+    """Batched sampler: (logits (B,V), keys (B,), temps (B,)) -> (B,) int32."""
+    def sampler(logits, keys, temps):
+        return jax.vmap(lambda lg, k, tp: sample_token(lg, k, tp, top_k))(
+            logits, keys, temps)
+    return sampler

@@ -1,0 +1,85 @@
+"""Request queue for the continuous-batching engine.
+
+Time is virtual: one unit = one batched decode step of the engine.  Arrival
+times in the same units make traces deterministic and replayable (the
+benchmarks replay one trace through both the continuous engine and the
+lock-step baseline).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any
+
+__all__ = ["Request", "FifoScheduler"]
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    prompt: (P,) int32 token ids, or (P, D) embeddings for stub-frontend
+    families (audio/vlm) — anything `model.prefill` accepts unbatched.
+    temperature 0 = greedy; top_k applies only when the engine was built
+    with a top-k sampler.  priority: lower runs first (ties by arrival,
+    then submission order).
+    """
+    uid: int
+    prompt: Any
+    max_new_tokens: int
+    temperature: float = 0.0
+    eos_id: int | None = None
+    arrival: int = 0
+    priority: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclass
+class FifoScheduler:
+    """Priority-then-arrival FIFO over future-dated requests.
+
+    `pop_ready(now)` only releases requests whose arrival time has passed,
+    so a replayed trace admits requests exactly when they "arrive" even
+    though the whole trace is submitted up front.  Two heaps: future-dated
+    entries wait in an arrival-ordered heap and migrate to the
+    (priority, arrival)-ordered ready heap as the clock passes them —
+    amortized O(log N) per request instead of re-heapifying the whole
+    queue on every admission attempt.
+    """
+    _future: list = field(default_factory=list)   # (arrival, tie, req)
+    _ready: list = field(default_factory=list)    # (priority, arrival, tie, req)
+    _tie: itertools.count = field(default_factory=itertools.count)
+
+    def add(self, req: Request) -> None:
+        heapq.heappush(self._future, (req.arrival, next(self._tie), req))
+
+    def _migrate(self, now: int) -> None:
+        while self._future and self._future[0][0] <= now:
+            arrival, tie, req = heapq.heappop(self._future)
+            heapq.heappush(self._ready, (req.priority, arrival, tie, req))
+
+    def pop_ready(self, now: int) -> Request | None:
+        """Best admissible request (arrival <= now) by (priority, arrival),
+        else None.  Future-dated entries never block admissible ones."""
+        self._migrate(now)
+        if self._ready:
+            return heapq.heappop(self._ready)[-1]
+        return None
+
+    def next_arrival(self) -> int | None:
+        """Earliest arrival among queued requests (for idle fast-forward)."""
+        cands = [a for _, a, _, _ in self._ready]
+        if self._future:
+            cands.append(self._future[0][0])
+        return min(cands, default=None)
+
+    def __len__(self) -> int:
+        return len(self._future) + len(self._ready)
+
+    def __bool__(self) -> bool:
+        return bool(self._future or self._ready)

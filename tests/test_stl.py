@@ -1,7 +1,7 @@
 """STL-core LUT semantics (Sec. III-B): bit-exact equivalence + Table I."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import stl
 

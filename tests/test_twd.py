@@ -1,7 +1,7 @@
 """TWD base-3 packing (Sec. III-E): roundtrips, density, alignment."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import twd
 
