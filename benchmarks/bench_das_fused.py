@@ -1,0 +1,90 @@
+"""Fused DAS->ternary GEMM serving path vs the densifying dense path.
+
+Measures the decode-shaped packed-weight matmul both ways on one ternary
+linear (K=1280, N=512, batch=4 decode rows):
+
+  * dense  — the pre-fusion serving path: DAS mask -> densified activations
+             -> packed ternary GEMM (activations round-trip HBM dense),
+  * fused  — `das_compact` -> `das_ternary_gemm` (compacted activations
+             routed straight against base-3 packed weights).
+
+Wall-clock here is XLA-on-CPU (`mode="ref"` jnp paths plus one small
+interpret-mode Pallas sample), so the µs columns are a *tracking* artifact
+for CI regression gating, not the paper's TPU claim.  The bandwidth side is
+reported analytically in `hbm_model`: bytes-from-HBM per token for each
+path (f32 activations / compacted values + 1-byte in-block lane ids +
+base-3 packed weights at 1.6 bits/weight).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import das, twd
+from repro.kernels import ops
+
+M, K, N = 4, 1280, 512
+BLOCK, KEEP = 32, 16
+KI = 320             # interpret-mode sample kept small (one 64B slab)
+
+
+def _hbm_bytes(k: int, n: int, keep: int, block: int):
+    """(dense_act, fused_act, packed_w) bytes from HBM per token for one
+    K x N packed layer: f32 dense activations vs f32 compacted values plus
+    1-byte in-block lane ids; weights identical (base-3 packed) both ways."""
+    packed = twd.packed_nbytes((k, n))
+    kc = k * keep // block
+    return k * 4, kc * 4 + kc * 1, packed
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    trits = rng.integers(-1, 2, size=(K, N)).astype(np.int8)
+    packed = jnp.asarray(twd.pack_ternary(trits))
+    scale = jnp.float32(0.42)
+
+    @jax.jit
+    def dense_path(xv):
+        m = das.das_mask(xv, block_size=BLOCK, keep=KEEP)
+        xs = das.das_apply(xv, m)
+        return ops.ternary_gemm(xs, packed, scale, mode="ref")
+
+    @jax.jit
+    def fused_path(xv):
+        ca = das.das_compact(xv, block_size=BLOCK, keep=KEEP)
+        return ops.das_ternary_gemm(ca.values, ca.indices, packed, scale,
+                                    keep=KEEP, block=BLOCK, mode="ref")
+
+    # parity guard so the bench can't silently time diverging paths
+    err = float(jnp.abs(dense_path(x) - fused_path(x)).max())
+    assert err < 1e-3, f"fused/dense diverged: {err}"
+
+    us_dense = time_fn(dense_path, x)
+    us_fused = time_fn(fused_path, x)
+
+    xi = x[:, :KI]
+    packed_i = jnp.asarray(twd.pack_ternary(trits[:KI]))
+
+    @jax.jit
+    def fused_interpret(xv):
+        ca = das.das_compact(xv, block_size=BLOCK, keep=KEEP)
+        return ops.das_ternary_gemm(ca.values, ca.indices, packed_i, scale,
+                                    keep=KEEP, block=BLOCK, mode="interpret")
+
+    us_interp = time_fn(fused_interpret, xi, iters=3, warmup=1)
+
+    d_act, f_act, w_bytes = _hbm_bytes(K, N, KEEP, BLOCK)
+    d_bytes, f_bytes = d_act + w_bytes, f_act + w_bytes
+    return [
+        {"name": "das_fused/dense_path_ref", "us_per_call": us_dense / M,
+         "derived": f"M={M};K={K};N={N}"},
+        {"name": "das_fused/fused_path_ref", "us_per_call": us_fused / M,
+         "derived": f"vs_dense={us_fused / max(us_dense, 1e-9):.2f}x"},
+        {"name": "das_fused/fused_kernel_interpret",
+         "us_per_call": us_interp / M, "derived": f"M={M};K={KI};N={N}"},
+        {"name": "das_fused/hbm_model", "us_per_call": 0.0,
+         "derived": (f"act_ratio={f_act / d_act:.3f};"
+                     f"total_ratio={f_bytes / d_bytes:.3f};"
+                     f"dense_B={d_bytes};fused_B={f_bytes}")},
+    ]

@@ -1,7 +1,6 @@
 """Shared benchmark helpers: timing + tiny-model training harness."""
 from __future__ import annotations
 
-import dataclasses
 import time
 
 import jax

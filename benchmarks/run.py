@@ -2,7 +2,27 @@
 
 Prints ``name,us_per_call,derived`` CSV.  BENCH_STEPS env var scales the
 training-based benches (Tables II/III, Fig 11).
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/run.py [FILTER ...] \
+        [--json BENCH.json] [--baseline benchmarks/baseline.json] \
+        [--max-regression 2.0]
+
+FILTER substrings select modules (e.g. ``serve_engine das_fused``).
+``--json`` writes the results as {name: {us_per_call, derived}} — pointing
+it at benchmarks/baseline.json is how the committed baseline is
+regenerated.  ``--baseline`` compares us_per_call against a committed
+baseline and exits 1 on any entry slower than ``--max-regression`` times
+its baseline, OR on any baselined entry missing from the run (a renamed
+bench or drifted filter must not silently void the gate).  Regressions
+below a 500 µs absolute delta, baseline entries <= 0, and keys starting
+with "_" are ignored: the committed baseline is wall-clock from one
+machine class, so sub-millisecond entries gate only on blowups, not on
+runner hardware variance.  If CI's runner class changes, refresh the
+committed baseline from the uploaded BENCH.json artifact.
 """
+import argparse
+import json
 import sys
 import time
 
@@ -19,20 +39,75 @@ MODULES = [
     "bench_table3_gla",
     "bench_fig11_ablation",
     "bench_serve_engine",
+    "bench_das_fused",
 ]
+
+ABS_FLOOR_US = 500.0   # ignore regressions smaller than this delta
+
+
+def check_regression(results: dict, baseline: dict, max_reg: float) -> list[str]:
+    """-> list of human-readable violations (empty == pass)."""
+    bad = []
+    for name, base in baseline.items():
+        if name.startswith("_"):
+            continue
+        base_us = base["us_per_call"] if isinstance(base, dict) else float(base)
+        if name not in results:
+            bad.append(f"{name}: in baseline but missing from this run "
+                       f"(renamed bench or filters drifted?)")
+            continue
+        if base_us <= 0:
+            continue
+        us = results[name]["us_per_call"]
+        if us > max_reg * base_us and us - base_us > ABS_FLOOR_US:
+            bad.append(f"{name}: {us:.1f}us > {max_reg:.1f}x baseline "
+                       f"{base_us:.1f}us")
+    return bad
 
 
 def main() -> None:
-    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("filters", nargs="*", help="module-name substrings")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write results as JSON (regenerates the baseline "
+                         "when pointed at benchmarks/baseline.json)")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="committed baseline JSON to gate against")
+    ap.add_argument("--max-regression", type=float, default=2.0)
+    args = ap.parse_args()
+
+    results: dict[str, dict] = {}
     print("name,us_per_call,derived")
     for name in MODULES:
-        if only and not any(o in name for o in only):
+        if args.filters and not any(o in name for o in args.filters):
             continue
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
         for row in mod.run():
             print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+            results[row["name"]] = {"us_per_call": round(row["us_per_call"], 1),
+                                    "derived": str(row["derived"])}
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if args.json:
+        payload = {"_regenerate": (
+            "PYTHONPATH=src:. python benchmarks/run.py serve_engine das_fused "
+            "--json benchmarks/baseline.json  # run on an idle machine; CI "
+            "gates us_per_call at --max-regression (default 2.0x)")}
+        payload.update(results)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        bad = check_regression(results, baseline, args.max_regression)
+        for line in bad:
+            print(f"# REGRESSION {line}", file=sys.stderr)
+        if bad:
+            sys.exit(1)
+        print(f"# baseline check OK ({args.baseline})", file=sys.stderr)
 
 
 if __name__ == "__main__":

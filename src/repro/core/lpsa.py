@@ -23,7 +23,6 @@ so the decode ring never evicts a still-visible key).
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, NamedTuple
 
 import jax

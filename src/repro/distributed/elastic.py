@@ -11,8 +11,6 @@ from __future__ import annotations
 
 from typing import Any
 
-import jax
-
 from repro.checkpoint.ckpt import restore_checkpoint
 
 __all__ = ["plan_remesh", "elastic_restore"]

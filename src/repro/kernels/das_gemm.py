@@ -1,16 +1,26 @@
-"""Pallas kernel: DAS block-sparse ternary GEMV (paper Sec. III-C/D).
+"""Pallas kernels: DAS block-sparse ternary GEMV/GEMM (paper Sec. III-C/D/E).
 
 The STL core consumes *compacted* activations — per 32-lane block only the
 Top-K survive — and a butterfly router steers the matching weight channels.
 On TPU the router becomes a block-local one-hot **scatter**: the compacted
 values are expanded back to their dense lane positions inside VMEM (a VPU
-one-hot matmul over a 32-wide block, negligible next to the MXU dot), then a
+compare-select over a 32-wide block, negligible next to the MXU dot), then a
 dense slab dot runs on the MXU.  HBM sees only the compacted activations
 (S_a x fewer bytes) — the bandwidth side of DAS — while the FLOP saving of
 the butterfly does not transfer to a dense systolic array (DESIGN.md §2).
 
-GEMV-shaped on purpose: the paper's STL core "is optimized for GEMV" (decode
-stage of one-batch inference); batch rows are vmapped by the wrapper.
+Two kernels:
+
+  * ``das_gemv``         — single-token GEMV against *unpacked* int8 trits
+    (the paper's "STL core is optimized for GEMV" decode shape; batch rows
+    vmapped by the caller).
+  * ``das_ternary_gemm`` — the fused serving path: batched compacted
+    activations routed straight against weights that *stay base-3 packed in
+    HBM*.  Each K tile is the paper's 64B:80B slab (320 trits = 64 packed
+    bytes): the VPU scatters the compacted values block-locally and decodes
+    the packed slab while the MXU consumes the previous one.  This is the
+    composition of DAS and TWD in one datapath — dense activations never
+    round-trip through HBM.
 """
 
 from __future__ import annotations
@@ -21,7 +31,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-K_TILE = 512          # dense lanes per K tile
+from repro.kernels.ternary_gemm import (K_SLAB, KP_SLAB, TRITS_PER_BYTE,
+                                        _decode_block)
+
+K_TILE = 512          # dense lanes per K tile (das_gemv)
 BLOCK = 32            # DAS block size B_s
 
 
@@ -89,3 +102,92 @@ def das_gemv(values: jax.Array, indices: jax.Array, w_trits: jax.Array,
     )(values[None, :], indices[None, :].astype(jnp.int32), w_trits,
       jnp.asarray(w_scale, jnp.float32).reshape(1, 1))
     return out[0]
+
+
+# ---------------------------------------------------------------------------
+# das_ternary_gemm: fused DAS scatter + TWD decode + matmul (serving path)
+# ---------------------------------------------------------------------------
+
+def _das_ternary_gemm_kernel(vals_ref, idx_ref, p_ref, wscale_ref, out_ref, *,
+                             n_k: int, keep: int, block: int):
+    """grid = (M/bm, N/bn, K/K_SLAB).
+
+    vals/idx: (bm, bkc) compacted slab (bkc = K_SLAB*keep/block),
+    p: (KP_SLAB, bn) uint8 base-3 packed weights, out: (bm, bn) f32.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = vals_ref[...].astype(jnp.float32)        # (bm, bkc)
+    local = idx_ref[...] - k * K_SLAB               # absolute -> tile-local
+    bm, bkc = vals.shape
+    nb = K_SLAB // block                            # DAS blocks per slab
+    # block-local scatter (the butterfly router): every compacted column c
+    # belongs to block c // keep, so only a `block`-wide compare is needed —
+    # keep == block degrades to the identity permutation (dense fallback).
+    vals_b = vals.reshape(bm * nb, keep)
+    loc_b = local.reshape(bm * nb, keep) % block    # in-block lane ids
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, block), 2)
+    hit = loc_b[:, :, None] == lanes                # (bm*nb, keep, block)
+    dense = jnp.sum(jnp.where(hit, vals_b[:, :, None], 0.0), axis=1)
+    dense = dense.reshape(bm, K_SLAB)
+    # TWD decode of the 64B:80B slab on the VPU, then the MXU slab dot
+    w = _decode_block(p_ref[...]).astype(jnp.float32)   # (K_SLAB, bn)
+    out_ref[...] += jax.lax.dot(dense, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finalize():
+        out_ref[...] = out_ref[...] * wscale_ref[0, 0]
+
+
+def das_ternary_gemm(values: jax.Array, indices: jax.Array,
+                     packed: jax.Array, w_scale: jax.Array, *, keep: int,
+                     block: int = BLOCK, block_m: int = 8,
+                     block_n: int = 256, interpret: bool = False) -> jax.Array:
+    """(M, Kc) compacted values/indices  x  base-3 packed (K/5, N) -> (M, N).
+
+    Kc = K * keep / block; indices are absolute K-lane ids, block-sorted
+    ascending (core.das.das_compact output).  K must tile by the 320-trit
+    (64-byte) TWD slab and `block` must divide the slab.  Weights stay
+    packed in HBM; activations enter compacted — the fused DAS+TWD datapath.
+    """
+    m, kc = values.shape
+    kp, n = packed.shape
+    kdim = kp * TRITS_PER_BYTE
+    if kc * block != kdim * keep:
+        raise ValueError(f"Kc={kc} inconsistent with K={kdim}, keep={keep}, "
+                         f"block={block}")
+    if kdim % K_SLAB:
+        raise ValueError(f"K={kdim} must be a multiple of the {K_SLAB}-trit slab")
+    if K_SLAB % block:
+        raise ValueError(f"DAS block {block} must divide the {K_SLAB}-trit slab")
+    if not (0 < keep <= block):
+        raise ValueError(f"keep={keep} out of range for block {block}")
+    bkc = K_SLAB // block * keep
+    bm = min(block_m, m)
+    while m % bm:
+        bm -= 1
+    bn = min(block_n, n)
+    while n % bn:
+        bn -= 1
+    n_k = kdim // K_SLAB
+
+    kernel = functools.partial(_das_ternary_gemm_kernel, n_k=n_k, keep=keep,
+                               block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bkc), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, bkc), lambda i, j, k: (i, k)),
+            pl.BlockSpec((KP_SLAB, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(values, indices.astype(jnp.int32), packed,
+      jnp.asarray(w_scale, jnp.float32).reshape(1, 1))

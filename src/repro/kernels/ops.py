@@ -15,19 +15,43 @@ import jax.numpy as jnp
 
 from . import ref
 from .das_gemm import das_gemv as _das_gemv_pallas
+from .das_gemm import das_ternary_gemm as _das_ternary_gemm_pallas
 from .sparse_attn import sparse_attention as _sparse_attn_pallas
-from .ternary_gemm import K_SLAB, ternary_gemm as _ternary_gemm_pallas
+from .ternary_gemm import K_SLAB, TRITS_PER_BYTE
+from .ternary_gemm import ternary_gemm as _ternary_gemm_pallas
 from .ternary_gemm import twd_decode as _twd_decode_pallas
 from .topk_mask import topk_mask as _topk_mask_pallas
 
 __all__ = [
-    "use_pallas", "twd_decode", "ternary_gemm", "das_gemv", "topk_mask",
-    "sparse_attention", "K_SLAB",
+    "use_pallas", "kernel_wanted", "packed_gemm_ok", "fused_das_ok",
+    "twd_decode", "ternary_gemm", "das_gemv", "das_ternary_gemm",
+    "topk_mask", "sparse_attention", "K_SLAB",
 ]
 
 
 def use_pallas() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def kernel_wanted(mode: str) -> bool:
+    """True when `mode` selects a Pallas execution path (compiled or
+    emulated) rather than the pure-jnp reference."""
+    return mode in ("pallas", "interpret") or (mode == "auto" and use_pallas())
+
+
+def packed_gemm_ok(k: int, packed_rows: int) -> bool:
+    """Shapes admissible for the fused-decode `ternary_gemm` kernel: the
+    packed rows must cover K exactly (no export padding beyond K) and K must
+    tile by the 320-trit (64-byte) TWD slab."""
+    return packed_rows * TRITS_PER_BYTE == k and k % K_SLAB == 0
+
+
+def fused_das_ok(k: int, packed_rows: int, das) -> bool:
+    """Shapes admissible for the fused `das_ternary_gemm` serving path:
+    packed-GEMM-compatible AND the DAS block tiles the TWD slab (so a slab
+    holds whole blocks and the compacted stream splits per K tile)."""
+    return (das is not None and packed_gemm_ok(k, packed_rows)
+            and K_SLAB % das.block == 0 and 0 < das.keep <= das.block)
 
 
 def twd_decode(packed: jax.Array, k: int, *, mode: str = "auto") -> jax.Array:
@@ -61,6 +85,22 @@ def das_gemv(values: jax.Array, indices: jax.Array, w_trits: jax.Array,
         return _das_gemv_pallas(values, indices, w_trits, w_scale, keep=keep,
                                 interpret=True, **kw)
     return ref.das_gemv_ref(values, indices, w_trits, w_scale)
+
+
+def das_ternary_gemm(values: jax.Array, indices: jax.Array,
+                     packed: jax.Array, w_scale: jax.Array, *, keep: int,
+                     block: int = 32, mode: str = "auto", **kw) -> jax.Array:
+    """Fused serving path: (M, Kc) compacted activations x base-3 packed
+    (K/5, N) -> (M, N) f32 — DAS scatter + TWD decode + matmul in one pass."""
+    if mode == "pallas" or (mode == "auto" and use_pallas()):
+        return _das_ternary_gemm_pallas(values, indices, packed, w_scale,
+                                        keep=keep, block=block, **kw)
+    if mode == "interpret":
+        return _das_ternary_gemm_pallas(values, indices, packed, w_scale,
+                                        keep=keep, block=block,
+                                        interpret=True, **kw)
+    k = packed.shape[0] * TRITS_PER_BYTE
+    return ref.das_ternary_gemm_ref(values, indices, packed, w_scale, k)
 
 
 def topk_mask(x: jax.Array, *, keep: int, block: int = 32,

@@ -18,6 +18,7 @@ __all__ = [
     "ternary_gemm_packed_ref",
     "das_topk_mask_ref",
     "das_gemv_ref",
+    "das_ternary_gemm_ref",
     "sparse_attn_ref",
 ]
 
@@ -80,6 +81,21 @@ def das_gemv_ref(values: jax.Array, indices: jax.Array, w_trits: jax.Array,
     """
     rows = jnp.take(w_trits, indices, axis=0).astype(jnp.float32)  # (Kc, N)
     return (values.astype(jnp.float32) @ rows) * w_scale
+
+
+def das_ternary_gemm_ref(values: jax.Array, indices: jax.Array,
+                         packed: jax.Array, w_scale: jax.Array,
+                         k: int) -> jax.Array:
+    """Fused DAS + TWD oracle: decode packed weights, gather kept rows per
+    batch row, dense dot.
+
+    values/indices: (M, Kc) block-compacted activations (core.das.das_compact);
+    packed: (K/5, N) uint8 base-3.  Returns (M, N) f32.
+    """
+    w = twd_decode_ref(packed, k).astype(jnp.float32)       # (K, N)
+    rows = jnp.take(w, indices, axis=0)                     # (M, Kc, N)
+    return jnp.einsum("mk,mkn->mn", values.astype(jnp.float32),
+                      rows) * w_scale
 
 
 def sparse_attn_ref(q, k, v, q_pos, k_pos, *, sink: int, window: int,

@@ -76,13 +76,19 @@ def main(argv=None):
                     default="continuous")
     ap.add_argument("--no-sparse", action="store_true",
                     help="full attention + full KV cache (naive baseline)")
+    ap.add_argument("--kernel-mode", default="ref",
+                    choices=["ref", "interpret", "pallas", "auto"],
+                    help="ternary-linear execution path; kernel modes route "
+                         "slab-aligned packed+DAS layers through the fused "
+                         "das_ternary_gemm datapath")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_cfg(cfg)
-    rt = Runtime(serve_sparse=not args.no_sparse)
+    rt = Runtime(serve_sparse=not args.no_sparse,
+                 kernel_mode=args.kernel_mode)
     max_len = args.prompt_len + args.gen
 
     eng = build_engine(cfg, rt, max_slots=args.slots, max_len=max_len,

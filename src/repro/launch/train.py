@@ -13,10 +13,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import functools
-import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import lpsa as lpsa_lib
 from repro.models import layers as L
-from repro.models.ternary_linear import tlin_apply, tlin_init
+from repro.models.ternary_linear import tlin_apply, tlin_compact, tlin_init
 
 __all__ = [
     "attn_init", "qkv_project", "flash_masked", "attn_train",
@@ -54,12 +54,16 @@ def attn_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 
 def qkv_project(p: dict, cfg: ModelConfig, x: jax.Array, *,
                 kernel_mode: str = "ref"):
-    """(B, L, D) -> q (B,L,Hq,Dh), k/v (B,L,Hkv,Dh) through ternary linears."""
+    """(B, L, D) -> q (B,L,Hq,Dh), k/v (B,L,Hkv,Dh) through ternary linears.
+
+    On the fused DAS serving path the block top-k (the paper's ASM) runs
+    once per token and the compacted stream feeds all three projections."""
     b, l, _ = x.shape
     tc = cfg.ternary
-    q = tlin_apply(p["wq"], x, tc, kernel_mode=kernel_mode)
-    k = tlin_apply(p["wk"], x, tc, kernel_mode=kernel_mode)
-    v = tlin_apply(p["wv"], x, tc, kernel_mode=kernel_mode)
+    ca = tlin_compact(x, tc, p["wq"], kernel_mode=kernel_mode)
+    q = tlin_apply(p["wq"], x, tc, kernel_mode=kernel_mode, ca=ca)
+    k = tlin_apply(p["wk"], x, tc, kernel_mode=kernel_mode, ca=ca)
+    v = tlin_apply(p["wv"], x, tc, kernel_mode=kernel_mode, ca=ca)
     hd = cfg.head_dim_
     return (q.reshape(b, l, cfg.n_heads, hd),
             k.reshape(b, l, cfg.n_kv_heads, hd),

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.linear_attn import chunked_linear_attn, linear_attn_step
-from repro.models.ternary_linear import tlin_apply, tlin_init
+from repro.models.ternary_linear import tlin_apply, tlin_compact, tlin_init
 
 __all__ = ["gla_init", "gla_train", "gla_decode"]
 
@@ -44,10 +44,16 @@ def _proj(p, cfg, x, kernel_mode):
     b, l, _ = x.shape
     h, hd = cfg.n_heads, cfg.head_dim_
     tc = cfg.ternary
-    q = tlin_apply(p["wq"], x, tc, kernel_mode=kernel_mode).reshape(b, l, h, hd)
-    k = tlin_apply(p["wk"], x, tc, kernel_mode=kernel_mode).reshape(b, l, h, hd)
-    v = tlin_apply(p["wv"], x, tc, kernel_mode=kernel_mode).reshape(b, l, h, hd)
-    g = tlin_apply(p["wg"], x, tc, kernel_mode=kernel_mode)
+    # q/k/v/g share the input: one DAS compaction feeds all four on the
+    # fused packed serving path (no-op in training / ref modes)
+    ca = tlin_compact(x, tc, p["wq"], kernel_mode=kernel_mode)
+    q = tlin_apply(p["wq"], x, tc, kernel_mode=kernel_mode,
+                   ca=ca).reshape(b, l, h, hd)
+    k = tlin_apply(p["wk"], x, tc, kernel_mode=kernel_mode,
+                   ca=ca).reshape(b, l, h, hd)
+    v = tlin_apply(p["wv"], x, tc, kernel_mode=kernel_mode,
+                   ca=ca).reshape(b, l, h, hd)
+    g = tlin_apply(p["wg"], x, tc, kernel_mode=kernel_mode, ca=ca)
     la = jax.nn.log_sigmoid(
         x.astype(jnp.float32) @ p["wa1"].astype(jnp.float32)
         @ p["wa2"].astype(jnp.float32)) / TAU

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SsmConfig
 from repro.models import layers as L
-from repro.models.ternary_linear import tlin_apply, tlin_init
+from repro.models.ternary_linear import tlin_apply, tlin_compact, tlin_init
 
 __all__ = ["mamba_init", "mamba_train", "mamba_decode", "mamba_dims"]
 
@@ -54,8 +54,11 @@ def mamba_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
 
 def _proj(p, cfg, x, kernel_mode):
     tc = cfg.ternary
-    z = tlin_apply(p["wz"], x, tc, kernel_mode=kernel_mode)
-    xs = tlin_apply(p["wx"], x, tc, kernel_mode=kernel_mode)
+    # wz/wx share the block input: one DAS compaction feeds both on the
+    # fused packed serving path (no-op in training / ref modes)
+    ca = tlin_compact(x, tc, p["wz"], kernel_mode=kernel_mode)
+    z = tlin_apply(p["wz"], x, tc, kernel_mode=kernel_mode, ca=ca)
+    xs = tlin_apply(p["wx"], x, tc, kernel_mode=kernel_mode, ca=ca)
     bmat = jnp.einsum("...d,dn->...n", x, p["wb"].astype(x.dtype))
     cmat = jnp.einsum("...d,dn->...n", x, p["wc"].astype(x.dtype))
     dt = jax.nn.softplus(

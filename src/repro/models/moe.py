@@ -25,7 +25,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, MoeConfig
 from repro.core import ternary as tq
 from repro.core import twd
-from repro.models.ternary_linear import tlin_apply
+from repro.models.ternary_linear import tlin_apply, tlin_compact
 
 __all__ = ["moe_init", "moe_apply", "export_moe"]
 
@@ -148,8 +148,13 @@ def _dispatch_compute(x_tok, weights, router, cfg: ModelConfig,
 
 
 def _shared_ffn(p: dict, cfg: ModelConfig, x: jax.Array, kernel_mode: str):
-    g = tlin_apply(p["shared_gate"], x, cfg.ternary, kernel_mode=kernel_mode)
-    u = tlin_apply(p["shared_in"], x, cfg.ternary, kernel_mode=kernel_mode)
+    # shared gate/up see the same tokens: compact once on the fused DAS path
+    ca = tlin_compact(x, cfg.ternary, p["shared_gate"],
+                      kernel_mode=kernel_mode)
+    g = tlin_apply(p["shared_gate"], x, cfg.ternary, kernel_mode=kernel_mode,
+                   ca=ca)
+    u = tlin_apply(p["shared_in"], x, cfg.ternary, kernel_mode=kernel_mode,
+                   ca=ca)
     return tlin_apply(p["shared_out"], jax.nn.silu(g) * u, cfg.ternary,
                       kernel_mode=kernel_mode)
 

@@ -12,6 +12,18 @@ One logical layer, three physical representations:
 
 `export_serving` converts master -> packed/trits/bf16 offline, exactly like
 the paper's offline weight encoder feeding the TWD ROM.
+
+Serving dispatch for the packed representation (the paper's Sec. III-C/D/E
+composition):
+
+  * DAS on + kernel mode + slab-aligned shapes  ->  `ops.das_ternary_gemm`:
+    activations are block-compacted once (`tlin_compact`, shareable across
+    sibling projections of the same input) and routed *compacted* against
+    the base-3 packed weights — dense activations never round-trip HBM.
+  * kernel mode but DAS off / unaligned shapes  ->  `ops.ternary_gemm`
+    (fused TWD decode, dense activations).
+  * otherwise (or shapes incompatible with any kernel) -> pure-jnp
+    reference: densified DAS mask + unpack + einsum.
 """
 
 from __future__ import annotations
@@ -25,7 +37,7 @@ from repro.core import ternary as tq
 from repro.core import twd
 from repro.kernels import ops
 
-__all__ = ["tlin_init", "tlin_apply", "export_tlin"]
+__all__ = ["tlin_init", "tlin_apply", "tlin_compact", "export_tlin"]
 
 
 def tlin_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32,
@@ -42,9 +54,65 @@ def _das_maybe(x: jax.Array, tc: TernaryConfig) -> jax.Array:
     return das_lib.das_apply(x, mask)
 
 
+def tlin_compact(x: jax.Array, tc: TernaryConfig,
+                 p: dict | None = None, *, kernel_mode: str = "ref"):
+    """Block-compact `x` for the fused DAS serving path, or None.
+
+    Returns a `CompactActivation` only when a layer with params `p` (any
+    sibling sharing the same input works — pass one of them) would actually
+    take the fused path; callers projecting the same `x` through several
+    packed linears (q/k/v, gate/in) compute this once and pass it to each
+    `tlin_apply` via ``ca=``.
+    """
+    if tc.das is None or not tc.enabled:
+        return None
+    if not ops.kernel_wanted(kernel_mode):
+        return None
+    if p is not None:
+        if "packed" not in p:
+            return None
+        if not ops.fused_das_ok(x.shape[-1], p["packed"].shape[0], tc.das):
+            return None
+    return das_lib.das_compact(x, block_size=tc.das.block, keep=tc.das.keep)
+
+
+def _apply_packed(p: dict, x: jax.Array, tc: TernaryConfig,
+                  kernel_mode: str, ca) -> jax.Array:
+    """Serving matmul against base-3 packed weights (see module docstring)."""
+    k = x.shape[-1]
+    lead = x.shape[:-1]
+    scale = p["scale"]
+    kp = p["packed"].shape[0]
+    if ops.kernel_wanted(kernel_mode) and ops.fused_das_ok(k, kp, tc.das):
+        # fused path: compacted activations straight into the kernel
+        if ca is None:
+            ca = das_lib.das_compact(x, block_size=tc.das.block,
+                                     keep=tc.das.keep)
+        kc = ca.values.shape[-1]
+        y = ops.das_ternary_gemm(
+            ca.values.reshape(-1, kc), ca.indices.reshape(-1, kc),
+            p["packed"], scale, keep=tc.das.keep, block=tc.das.block,
+            mode=kernel_mode)
+    elif ops.kernel_wanted(kernel_mode) and ops.packed_gemm_ok(k, kp):
+        xs = _das_maybe(x, tc)
+        y = ops.ternary_gemm(xs.reshape(-1, k), p["packed"], scale,
+                             mode=kernel_mode)
+    else:  # shapes a kernel can't tile (or ref mode): pure-jnp reference
+        xs = _das_maybe(x, tc)
+        w = twd.unpack_ternary_arith(p["packed"], k)
+        y = jnp.einsum("mk,kn->mn", xs.reshape(-1, k).astype(jnp.float32),
+                       w.astype(jnp.float32)) * scale
+    return y.reshape(*lead, y.shape[-1]).astype(x.dtype)
+
+
 def tlin_apply(p: dict, x: jax.Array, tc: TernaryConfig, *,
-               kernel_mode: str = "ref") -> jax.Array:
-    """Apply the ternary linear in whatever representation `p` carries."""
+               kernel_mode: str = "ref", ca=None) -> jax.Array:
+    """Apply the ternary linear in whatever representation `p` carries.
+
+    ``ca`` optionally supplies a precomputed `CompactActivation` of `x`
+    (from `tlin_compact`) so sibling projections of one input don't repeat
+    the per-block top-k; it is consulted only on the fused packed path.
+    """
     if not tc.enabled:
         w = p["w"] if "w" in p else p["w_hp"]
         return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
@@ -56,22 +124,11 @@ def tlin_apply(p: dict, x: jax.Array, tc: TernaryConfig, *,
         return jnp.einsum("...k,kn->...n", xq, wq.astype(xq.dtype))
 
     # --- serving paths ------------------------------------------------------
-    xs = _das_maybe(x, tc)
-    scale = p["scale"]
     if "packed" in p:
-        k = xs.shape[-1]
-        lead = xs.shape[:-1]
-        x2 = xs.reshape(-1, k)
-        if kernel_mode in ("pallas", "interpret"):
-            y = ops.ternary_gemm(x2, p["packed"], scale, mode=kernel_mode)
-        else:
-            w = twd.unpack_ternary_arith(p["packed"], k)
-            y = jnp.einsum("mk,kn->mn", x2.astype(jnp.float32),
-                           w.astype(jnp.float32)) * scale
-        n = y.shape[-1]
-        return y.reshape(*lead, n).astype(x.dtype)
+        return _apply_packed(p, x, tc, kernel_mode, ca)
     if "trits" in p:
-        w = p["trits"].astype(x.dtype) * scale.astype(x.dtype)
+        xs = _das_maybe(x, tc)
+        w = p["trits"].astype(x.dtype) * p["scale"].astype(x.dtype)
         return jnp.einsum("...k,kn->...n", xs, w)
     raise KeyError(f"unrecognized ternary-linear params: {sorted(p)}")
 

@@ -16,7 +16,7 @@ Three phases share the same parameters:
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax
@@ -30,7 +30,7 @@ from repro.models import layers as L
 from repro.models import mamba2 as M
 from repro.models import moe as MOE
 from repro.models import rwkv6 as R
-from repro.models.ternary_linear import tlin_apply, tlin_init
+from repro.models.ternary_linear import tlin_apply, tlin_compact, tlin_init
 
 __all__ = ["Runtime", "stack_init", "stack_train", "stack_prefill",
            "stack_decode", "init_layer_cache", "ffn_init", "ffn_apply"]
@@ -66,8 +66,11 @@ def ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array, *, kernel_mode="ref"):
     act = L.ACT[cfg.act]
     tc = cfg.ternary
     if "w_gate" in p:
-        h = act(tlin_apply(p["w_gate"], x, tc, kernel_mode=kernel_mode)) * \
-            tlin_apply(p["w_in"], x, tc, kernel_mode=kernel_mode)
+        # gate and up share the input: compact once for the fused DAS path
+        ca = tlin_compact(x, tc, p["w_gate"], kernel_mode=kernel_mode)
+        h = act(tlin_apply(p["w_gate"], x, tc, kernel_mode=kernel_mode,
+                           ca=ca)) * \
+            tlin_apply(p["w_in"], x, tc, kernel_mode=kernel_mode, ca=ca)
     else:
         h = act(tlin_apply(p["w_in"], x, tc, kernel_mode=kernel_mode))
     return tlin_apply(p["w_out"], h, tc, kernel_mode=kernel_mode)

@@ -31,7 +31,7 @@ finish): the baseline the benchmarks compare against.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
@@ -103,15 +103,21 @@ class ServeEngine:
     generation when any layer keeps a full (non-ring) cache.  ``top_k`` is
     static for the jitted step (0 = unrestricted); per-request temperature
     is dynamic.  ``policy``: "continuous" (default) or "wave" (lock-step
-    gang-scheduling baseline).
+    gang-scheduling baseline).  ``kernel_mode`` overrides ``rt.kernel_mode``
+    ("ref" | "interpret" | "pallas" | "auto") — with packed weights and DAS
+    enabled the kernel modes route decode through the fused
+    ``das_ternary_gemm`` datapath (compacted activations straight against
+    base-3 packed weights) on every slab-aligned layer.
     """
 
     def __init__(self, cfg: ModelConfig, sparams: dict,
                  rt: Runtime = Runtime(), *, max_slots: int = 4,
                  max_len: int = 512, top_k: int = 0, seed: int = 0,
-                 policy: str = "continuous"):
+                 policy: str = "continuous", kernel_mode: str | None = None):
         if policy not in ("continuous", "wave"):
             raise ValueError(f"unknown admission policy {policy!r}")
+        if kernel_mode is not None:
+            rt = replace(rt, kernel_mode=kernel_mode)
         self.cfg, self.sparams, self.rt = cfg, sparams, rt
         self.max_slots, self.max_len = max_slots, max_len
         self.policy = policy

@@ -1,0 +1,167 @@
+"""Fused DAS->ternary GEMM serving path (Sec. III-C/D/E composition).
+
+(a) kernel parity: `das_ternary_gemm` (interpret mode) vs the
+    `das_gemm_ref` gather oracle on TWD-decoded weights AND the
+    `stl_matmul_ref` LUT-pipeline oracle on densified activations —
+    sweeping batch, keep (incl. the keep==block dense fallback), DAS block,
+    and K/N tile edges;
+(b) dispatch: `ops.fused_das_ok` admissibility + `tlin_apply` graceful
+    fallback to the reference path on kernel-incompatible shapes;
+(c) engine integration: `ServeEngine` produces bitwise-identical token
+    streams with `kernel_mode="interpret"` (fused packed datapath) and
+    `kernel_mode="ref"` (densifying reference) on a slab-aligned model.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.configs.base import DasConfig, LpsaConfig, ModelConfig, TernaryConfig
+from repro.core import das, stl, twd
+from repro.kernels import ops, ref
+from repro.models import model as MD
+from repro.models.ternary_linear import tlin_apply, tlin_compact, tlin_init, \
+    export_tlin
+from repro.serve import Request, ServeEngine
+
+SCALE = 0.37
+
+
+def _fused_case(rng, m, k, n, keep, block, mode):
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    trits = rng.integers(-1, 2, size=(k, n)).astype(np.int8)
+    packed = jnp.asarray(twd.pack_ternary(trits))
+    assert packed.shape[0] * twd.TRITS_PER_BYTE == k  # slab-aligned, no pad
+    ca = das.das_compact(x, block_size=block, keep=keep)
+    y = np.asarray(ops.das_ternary_gemm(ca.values, ca.indices, packed, SCALE,
+                                        keep=keep, block=block, mode=mode))
+    return x, trits, packed, ca, y
+
+
+# -------------------------------------------------------------------------
+# (a) kernel vs oracles
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,keep,block", [
+    (1, 320, 128, 16, 32),     # GEMV shape, single slab
+    (4, 640, 256, 8, 32),      # decode batch, 2 slabs
+    (3, 320, 384, 32, 32),     # keep == block: dense fallback
+    (8, 960, 512, 24, 32),     # multi-tile N
+    (2, 320, 130, 16, 32),     # N not lane-aligned (bn degrades)
+    (5, 640, 128, 16, 16),     # non-default DAS block
+    (7, 320, 256, 1, 32),      # extreme sparsity keep=1
+])
+def test_fused_kernel_matches_oracles(rng, m, k, n, keep, block):
+    x, trits, packed, ca, y = _fused_case(rng, m, k, n, keep, block,
+                                          "interpret")
+    # oracle 1: TWD decode + per-row gather GEMM
+    r1 = np.asarray(ref.das_ternary_gemm_ref(ca.values, ca.indices, packed,
+                                             SCALE, k))
+    # oracle 2: STL LUT pipeline on mask-densified activations (ties the
+    # fused kernel to the paper's core semantics end-to-end)
+    xs = das.das_apply(x, das.das_mask(x, block_size=block, keep=keep))
+    r2 = np.asarray(stl.stl_matmul_ref(xs, jnp.asarray(trits))) * SCALE
+    np.testing.assert_allclose(y, r1, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(y, r2, rtol=1e-5, atol=1e-4)
+
+
+def test_fused_ref_dispatch_matches_interpret(rng):
+    m, k, n, keep, block = 3, 640, 256, 16, 32
+    _, _, packed, ca, y_i = _fused_case(rng, m, k, n, keep, block, "interpret")
+    y_r = np.asarray(ops.das_ternary_gemm(ca.values, ca.indices, packed,
+                                          SCALE, keep=keep, block=block,
+                                          mode="ref"))
+    np.testing.assert_allclose(y_i, y_r, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6),
+       st.sampled_from([320, 640]), st.sampled_from([128, 256, 320]),
+       st.sampled_from([1, 8, 16, 31, 32]))
+def test_fused_kernel_hypothesis(seed, m, k, n, keep):
+    rng = np.random.default_rng(seed)
+    _, _, packed, ca, y = _fused_case(rng, m, k, n, keep, 32, "interpret")
+    r = np.asarray(ref.das_ternary_gemm_ref(ca.values, ca.indices, packed,
+                                            SCALE, k))
+    np.testing.assert_allclose(y, r, rtol=1e-5, atol=1e-4)
+
+
+# -------------------------------------------------------------------------
+# (b) dispatch predicates + fallback
+# -------------------------------------------------------------------------
+
+def test_fused_das_ok_admissibility():
+    d32 = DasConfig(32, 16)
+    assert ops.fused_das_ok(320, 64, d32)
+    assert ops.fused_das_ok(640, 128, d32)
+    assert not ops.fused_das_ok(320, 64, None)          # DAS off
+    assert not ops.fused_das_ok(64, 16, d32)            # K not slab-tiled
+    assert not ops.fused_das_ok(320, 80, d32)           # padded packed rows
+    assert not ops.fused_das_ok(320, 64, DasConfig(48, 24))  # 48 !| 320
+
+
+def test_tlin_fallback_on_unaligned_shapes(rng):
+    """Kernel modes must degrade to the exact reference path, not raise."""
+    tc = TernaryConfig(das=DasConfig(32, 16))
+    p = export_tlin(tlin_init(jax.random.PRNGKey(0), 64, 48), tc)
+    x = jnp.asarray(rng.standard_normal((2, 64)), jnp.float32)
+    a = np.asarray(tlin_apply(p, x, tc, kernel_mode="interpret"))
+    b = np.asarray(tlin_apply(p, x, tc, kernel_mode="ref"))
+    np.testing.assert_array_equal(a, b)
+    assert tlin_compact(x, tc, p, kernel_mode="interpret") is None
+
+
+def test_tlin_shared_compaction_identical(rng):
+    """Precomputed compaction (qkv/gate-in sharing) is bit-identical."""
+    tc = TernaryConfig(das=DasConfig(32, 16))
+    p = export_tlin(tlin_init(jax.random.PRNGKey(1), 320, 160), tc)
+    x = jnp.asarray(rng.standard_normal((2, 3, 320)), jnp.float32)
+    ca = tlin_compact(x, tc, p, kernel_mode="interpret")
+    assert ca is not None
+    y0 = np.asarray(tlin_apply(p, x, tc, kernel_mode="interpret"))
+    y1 = np.asarray(tlin_apply(p, x, tc, kernel_mode="interpret", ca=ca))
+    np.testing.assert_array_equal(y0, y1)
+    # and the fused result agrees with the densifying reference
+    yr = np.asarray(tlin_apply(p, x, tc, kernel_mode="ref"))
+    np.testing.assert_allclose(y0, yr, rtol=1e-5, atol=1e-4)
+
+
+# -------------------------------------------------------------------------
+# (c) serve engine: fused (interpret) == dense (ref) token streams
+# -------------------------------------------------------------------------
+
+# every ternary-linear input dim is a multiple of the 320-trit TWD slab
+# (d_model = q_dim = d_ff = 320), so EVERY packed layer takes the fused path
+FUSED_CFG = ModelConfig(
+    name="tiny-fused", family="dense", n_layers=2, d_model=320, n_heads=4,
+    n_kv_heads=2, head_dim=80, d_ff=320, vocab=256,
+    ternary=TernaryConfig(das=DasConfig(32, 16)),
+    lpsa=LpsaConfig(sink=4, window=12, chunk=8),
+    dtype="float32", remat=False, scan_layers=False,
+)
+
+
+def _fused_trace(seed=0):
+    rng = np.random.default_rng(seed)
+    spec = [(9, 3, 0), (16, 3, 1)]   # tail-fed and pack-aligned prompts
+    return [Request(uid=i, prompt=np.asarray(
+                        rng.integers(0, FUSED_CFG.vocab, p), np.int32),
+                    max_new_tokens=g, arrival=a)
+            for i, (p, g, a) in enumerate(spec)]
+
+
+@pytest.mark.slow
+def test_serve_engine_fused_matches_ref_tokens():
+    params = MD.init_params(jax.random.PRNGKey(0), FUSED_CFG)
+    sparams = MD.export_serving(params, FUSED_CFG)
+    outs = {}
+    for mode in ("ref", "interpret"):
+        eng = ServeEngine(FUSED_CFG, sparams, max_slots=2, max_len=64,
+                          seed=0, kernel_mode=mode)
+        for r in _fused_trace():
+            eng.submit(r)
+        outs[mode] = eng.run()
+    for uid in outs["ref"]:
+        np.testing.assert_array_equal(outs["ref"][uid].tokens,
+                                      outs["interpret"][uid].tokens)

@@ -1,5 +1,4 @@
 """Fault tolerance: injected failures must not change the final parameters."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

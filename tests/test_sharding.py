@@ -1,12 +1,10 @@
 """Sharding rules: spec assignment, ZeRO-1 divisibility, cache specs."""
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, reduced
 from repro.distributed import sharding
 from repro.models import model as MD
-from repro.optim import adamw
 
 
 def _specs(arch):

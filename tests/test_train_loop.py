@@ -1,5 +1,4 @@
 """End-to-end training loop: loss decreases; checkpoint-resume bitwise."""
-import jax
 import numpy as np
 
 from repro.launch import train as T
