@@ -1,19 +1,30 @@
 """Fused DAS->ternary GEMM serving path vs the densifying dense path.
 
-Measures the decode-shaped packed-weight matmul both ways on one ternary
-linear (K=1280, N=512, batch=4 decode rows):
+Measures the decode-shaped packed-weight matmul on one ternary linear
+(K=1280, N=512, batch=4 decode rows — slab-aligned: K = 4 x 320 trits):
 
-  * dense  — the pre-fusion serving path: DAS mask -> densified activations
-             -> packed ternary GEMM (activations round-trip HBM dense),
-  * fused  — `das_compact` -> `das_ternary_gemm` (compacted activations
-             routed straight against base-3 packed weights).
+  * dense_path_ref  — the pre-fusion serving path: DAS mask -> densified
+    activations -> reference packed ternary GEMM (unpack + einsum; what
+    serving executed on this backend before the tuned dispatch existed),
+  * fused_path_tuned — the tuned serving path: the autotuner
+    (kernels/autotune) picks the per-shape winner for `das_ternary_gemm`
+    and the bench runs exactly what `tlin_apply(kernel_mode="tuned")`
+    dispatches (on XLA-CPU: rank-compare mask + strided f32 base-3 decode
+    GEMM; on TPU/GPU: a Pallas tile config),
+  * gather_oracle_ref — the jnp gather oracle (tracking only; XLA-CPU
+    gathers are ~15x below streaming bandwidth, which is why the tuned
+    path avoids them).
 
-Wall-clock here is XLA-on-CPU (`mode="ref"` jnp paths plus one small
-interpret-mode Pallas sample), so the µs columns are a *tracking* artifact
-for CI regression gating, not the paper's TPU claim.  The bandwidth side is
-reported analytically in `hbm_model`: bytes-from-HBM per token for each
-path (f32 activations / compacted values + 1-byte in-block lane ids +
-base-3 packed weights at 1.6 bits/weight).
+All operand arrays are passed as jit ARGUMENTS: closure-captured packed
+weights get constant-folded — XLA pre-decodes them at compile time and the
+bench times a fiction (~8x too fast at this shape).
+
+Wall-clock is whatever backend runs CI (the committed baseline is XLA-CPU),
+so the µs columns are a *tracking* artifact for regression gating, not the
+paper's TPU claim.  The bandwidth side is reported analytically in
+`hbm_model`: bytes-from-HBM per token for each path (f32 activations /
+compacted values + 1-byte in-block lane ids + base-3 packed weights at 1.6
+bits/weight).
 """
 import jax
 import jax.numpy as jnp
@@ -21,7 +32,7 @@ import numpy as np
 
 from benchmarks.common import time_fn
 from repro.core import das, twd
-from repro.kernels import ops
+from repro.kernels import autotune, ops, xla_gemm
 
 M, K, N = 4, 1280, 512
 BLOCK, KEEP = 32, 16
@@ -45,42 +56,62 @@ def run():
     scale = jnp.float32(0.42)
 
     @jax.jit
-    def dense_path(xv):
+    def dense_path(xv, p):
         m = das.das_mask(xv, block_size=BLOCK, keep=KEEP)
         xs = das.das_apply(xv, m)
-        return ops.ternary_gemm(xs, packed, scale, mode="ref")
+        return ops.ternary_gemm(xs, p, scale, mode="ref")
 
     @jax.jit
-    def fused_path(xv):
+    def gather_oracle(xv, p):
         ca = das.das_compact(xv, block_size=BLOCK, keep=KEEP)
-        return ops.das_ternary_gemm(ca.values, ca.indices, packed, scale,
+        return ops.das_ternary_gemm(ca.values, ca.indices, p, scale,
                                     keep=KEEP, block=BLOCK, mode="ref")
 
-    # parity guard so the bench can't silently time diverging paths
-    err = float(jnp.abs(dense_path(x) - fused_path(x)).max())
-    assert err < 1e-3, f"fused/dense diverged: {err}"
+    # eager tune (real timed runs on a cache miss), then jit the dispatch
+    # exactly as tlin_apply(kernel_mode="tuned") executes it
+    cfg = autotune.tune("das_ternary_gemm", m=M, k=K, n=N, keep=KEEP,
+                        block=BLOCK)
 
-    us_dense = time_fn(dense_path, x)
-    us_fused = time_fn(fused_path, x)
+    @jax.jit
+    def fused_path(xv, p):
+        if cfg.impl.startswith("xla_dense"):
+            xs = xla_gemm.masked_dense(xv, keep=KEEP, block=BLOCK)
+            return xla_gemm.decode_matmul(xs, p, scale, impl=cfg.impl)
+        ca = das.das_compact(xv, block_size=BLOCK, keep=KEEP)
+        return autotune.run_das_gemm(ca.values, ca.indices, p, scale,
+                                     keep=KEEP, block=BLOCK, cfg=cfg)
+
+    # parity guard so the bench can't silently time diverging paths
+    want = dense_path(x, packed)
+    for fn in (gather_oracle, fused_path):
+        err = float(jnp.abs(want - fn(x, packed)).max())
+        assert err < 1e-3, f"{fn.__name__} diverged from dense path: {err}"
+
+    us_dense = time_fn(dense_path, x, packed)
+    us_fused = time_fn(fused_path, x, packed)
+    us_gather = time_fn(gather_oracle, x, packed)
 
     xi = x[:, :KI]
     packed_i = jnp.asarray(twd.pack_ternary(trits[:KI]))
 
     @jax.jit
-    def fused_interpret(xv):
+    def fused_interpret(xv, p):
         ca = das.das_compact(xv, block_size=BLOCK, keep=KEEP)
-        return ops.das_ternary_gemm(ca.values, ca.indices, packed_i, scale,
+        return ops.das_ternary_gemm(ca.values, ca.indices, p, scale,
                                     keep=KEEP, block=BLOCK, mode="interpret")
 
-    us_interp = time_fn(fused_interpret, xi, iters=3, warmup=1)
+    us_interp = time_fn(fused_interpret, xi, packed_i, iters=3, warmup=1)
 
     d_act, f_act, w_bytes = _hbm_bytes(K, N, KEEP, BLOCK)
     d_bytes, f_bytes = d_act + w_bytes, f_act + w_bytes
     return [
         {"name": "das_fused/dense_path_ref", "us_per_call": us_dense / M,
          "derived": f"M={M};K={K};N={N}"},
-        {"name": "das_fused/fused_path_ref", "us_per_call": us_fused / M,
-         "derived": f"vs_dense={us_fused / max(us_dense, 1e-9):.2f}x"},
+        {"name": "das_fused/fused_path_tuned", "us_per_call": us_fused / M,
+         "derived": (f"vs_dense={us_fused / max(us_dense, 1e-9):.2f}x;"
+                     f"impl={cfg.impl}")},
+        {"name": "das_fused/gather_oracle_ref", "us_per_call": us_gather / M,
+         "derived": f"vs_dense={us_gather / max(us_dense, 1e-9):.2f}x"},
         {"name": "das_fused/fused_kernel_interpret",
          "us_per_call": us_interp / M, "derived": f"M={M};K={KI};N={N}"},
         {"name": "das_fused/hbm_model", "us_per_call": 0.0,

@@ -6,7 +6,11 @@ training-based benches (Tables II/III, Fig 11).
 Usage:
     PYTHONPATH=src:. python benchmarks/run.py [FILTER ...] \
         [--json BENCH.json] [--baseline benchmarks/baseline.json] \
-        [--max-regression 2.0]
+        [--max-regression 2.0] [--history benchmarks/BENCH_history.json]
+
+``--history`` appends this run's results as one timestamped entry (UTC time
++ git short-sha) to a JSON-list file, so per-PR CI runs accumulate a
+queryable perf record alongside the pass/fail gate.
 
 FILTER substrings select modules (e.g. ``serve_engine das_fused``).
 ``--json`` writes the results as {name: {us_per_call, derived}} — pointing
@@ -22,7 +26,9 @@ runner hardware variance.  If CI's runner class changes, refresh the
 committed baseline from the uploaded BENCH.json artifact.
 """
 import argparse
+import datetime
 import json
+import subprocess
 import sys
 import time
 
@@ -43,6 +49,28 @@ MODULES = [
 ]
 
 ABS_FLOOR_US = 500.0   # ignore regressions smaller than this delta
+
+
+def append_history(path: str, results: dict) -> None:
+    """Append one timestamped {ts, git, results} entry to a JSON-list file."""
+    try:
+        sha = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True).stdout.strip() \
+            or None
+    except OSError:
+        sha = None
+    try:
+        with open(path) as f:
+            hist = json.load(f)
+        if not isinstance(hist, list):
+            hist = []
+    except (OSError, ValueError):
+        hist = []
+    hist.append({"ts": datetime.datetime.now(datetime.timezone.utc)
+                 .isoformat(timespec="seconds"),
+                 "git": sha, "results": results})
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1)
 
 
 def check_regression(results: dict, baseline: dict, max_reg: float) -> list[str]:
@@ -74,6 +102,9 @@ def main() -> None:
     ap.add_argument("--baseline", metavar="PATH", default=None,
                     help="committed baseline JSON to gate against")
     ap.add_argument("--max-regression", type=float, default=2.0)
+    ap.add_argument("--history", metavar="PATH", default=None,
+                    help="append a timestamped entry for this run to a "
+                         "JSON-list history file")
     args = ap.parse_args()
 
     results: dict[str, dict] = {}
@@ -93,11 +124,15 @@ def main() -> None:
         payload = {"_regenerate": (
             "PYTHONPATH=src:. python benchmarks/run.py serve_engine das_fused "
             "--json benchmarks/baseline.json  # run on an idle machine; CI "
-            "gates us_per_call at --max-regression (default 2.0x)")}
+            "gates us_per_call at --max-regression 1.5")}
         payload.update(results)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)
+
+    if args.history:
+        append_history(args.history, results)
+        print(f"# appended to {args.history}", file=sys.stderr)
 
     if args.baseline:
         with open(args.baseline) as f:

@@ -20,9 +20,11 @@ from typing import Literal
 __all__ = [
     "HardwareSpec", "ModelShape", "TenetOpt",
     "TENET_ASIC", "TENET_FPGA", "A100_NAIVE", "A100_OPT", "CPU_I7", "TPU_V5E",
+    "CPU_HOST",
     "LLAMA_1B3", "LLAMA_3B", "LLAMA_7B",
     "linear_cost", "attention_cost", "stage_cost", "e2e",
     "StageCost", "E2EReport",
+    "backend_hw", "kernel_cost",
 ]
 
 Stage = Literal["prefill", "decode"]
@@ -63,6 +65,11 @@ CPU_I7 = HardwareSpec("i7-12700", 1.2, 1.2, 30.0, 65.0, onchip_mb=25.0,
                       flop_util=0.55, bw_util=0.80)
 # TPU v5e-class chip (roofline constants used throughout EXPERIMENTS.md)
 TPU_V5E = HardwareSpec("tpu-v5e", 394.0, 197.0, 819.0, 170.0, onchip_mb=128.0)
+# Generic CI-runner host: what a single XLA-CPU thread pool sustains on the
+# decode-shaped GEMMs the autotuner ranks (measured ~30 GFLOP/s effective on
+# M<=8 matmuls, ~25 GB/s streaming) — coarse on purpose: kernel_cost() only
+# has to order candidates, not predict absolute microseconds.
+CPU_HOST = HardwareSpec("cpu-host", 0.03, 0.03, 25.0, 65.0, onchip_mb=16.0)
 
 DRAM_PJ_PER_BYTE = 640.0     # HBM2 access energy  (paper cites >300x compute)
 MAC_PJ_LOW = 0.2             # ternary MAC energy @28nm
@@ -235,6 +242,100 @@ def _roofline_latency(hw: HardwareSpec, c: StageCost) -> float:
     # low/high engines pipeline (LPSA hides attention under projection) but
     # both contend with DRAM: classic max() roofline.
     return max(t_low + 0.15 * t_high, t_high, t_mem)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-candidate cost model (feeds kernels/autotune.py)
+# ---------------------------------------------------------------------------
+#
+# The DSE machinery above prices whole serving stages; the autotuner needs the
+# same roofline logic one level down — "which tile config / implementation of
+# ONE kernel call is fastest on THIS backend".  kernel_cost() prices a single
+# (ternary_gemm | das_ternary_gemm | sparse_attn) invocation for a named
+# implementation.  Only the *ordering* matters: autotune ranks candidates with
+# this model, then confirms the top few with real timed runs.
+
+# effective FLOPs per decoded trit for the base-3 unpack (measured on XLA-CPU:
+# the int32 div/mod chain costs ~3x the float divide-free variant)
+_DECODE_OPS = {"plain": 8.0, "f32dec": 3.0, "pallas": 6.0}
+# intermediate bytes written+read per decoded trit (XLA materializes the int32
+# digit stack for "plain"; "f32dec" stays in registers feeding the sub-GEMMs)
+_DECODE_BYTES = {"plain": 12.0, "f32dec": 1.6, "pallas": 0.0}
+# random-gather effective-bandwidth slowdown vs streaming reads
+_GATHER_SLOWDOWN = {"cpu": 15.0, "gpu": 2.0, "tpu": 4.0}
+# Pallas interpreter (emulation) penalty: never competitive with a compiled
+# path, but still ranked so interpret-only tuning (CI) orders tile shapes
+_INTERPRET_PENALTY = 2000.0
+_STEP_OVERHEAD_S = 2e-6      # per grid-step / per-chunk dispatch overhead
+TRITS_PER_BYTE_F = 5.0
+
+
+def backend_hw(backend: str) -> HardwareSpec:
+    """HardwareSpec used to rank kernel candidates on a JAX backend name."""
+    return {"tpu": TPU_V5E, "gpu": A100_OPT}.get(backend, CPU_HOST)
+
+
+def kernel_cost(hw: HardwareSpec, op: str, impl: str, *, m: int = 1,
+                k: int = 0, n: int = 0, keep: int = 0, block: int = 32,
+                block_m: int = 0, block_n: int = 0, block_k: int = 0,
+                hq: int = 0, hkv: int = 0, lq: int = 0, lk: int = 0,
+                d: int = 0) -> float:
+    """Estimated seconds for one kernel call under implementation `impl`.
+
+    GEMM ops (`ternary_gemm`, `das_ternary_gemm`): (M, K) x packed (K/5, N).
+    `keep`/`block` describe DAS compaction (keep=0 => dense).  `block_*` are
+    Pallas tile shapes (0 => kernel defaults).  `sparse_attn`: hq/hkv heads,
+    lq queries vs lk keys of head dim d; `block_k` doubles as the XLA flash
+    kv-chunk.  Implementations: "pallas"/"interpret" (tiled kernels),
+    "xla_plain"/"xla_f32dec" (dense decode-GEMM), "xla_dense_plain"/
+    "xla_dense_f32dec" (DAS mask densify + decode-GEMM), "xla_gather"
+    (per-row gather of kept lanes), "xla_flash" (chunked online-softmax).
+    """
+    peak = hw.peak_tops_low * 1e12 * hw.flop_util
+    bw = hw.hbm_gbps * 1e9 * hw.bw_util
+    gather_bw = bw / _GATHER_SLOWDOWN.get(hw.name.split("-")[0], 10.0)
+
+    if op in ("ternary_gemm", "das_ternary_gemm"):
+        trits = float(k) * n
+        sa = keep / block if keep else 1.0
+        flops = 2.0 * m * k * n                      # dense-K slab dot
+        bytes_ = trits / TRITS_PER_BYTE_F + m * k * 4.0 + m * n * 4.0
+        if impl in ("pallas", "interpret"):
+            bm = block_m or min(8, m)
+            bn = block_n or min(256, n)
+            # decode + scatter re-run once per M-tile x N-tile of the grid
+            flops += (_DECODE_OPS["pallas"] * trits + m * k * max(keep, 1)) \
+                * max(1, -(-m // bm))
+            steps = max(1, -(-m // bm)) * max(1, -(-n // bn)) \
+                * max(1, k // (320 * max(block_k, 1)))
+            t = flops / peak + bytes_ / bw + steps * _STEP_OVERHEAD_S
+            return t * (_INTERPRET_PENALTY if impl == "interpret" else 1.0)
+        if impl == "xla_gather":
+            # decode everything, then per-row gather of the kept K lanes
+            flops = 2.0 * m * (k * sa) * n + _DECODE_OPS["plain"] * trits
+            bytes_ += m * (k * sa) * n * 4.0 * (bw / gather_bw)
+            return flops / peak + bytes_ / bw
+        dec = "plain" if impl.endswith("plain") else "f32dec"
+        flops += _DECODE_OPS[dec] * trits
+        bytes_ += _DECODE_BYTES[dec] * trits
+        if impl.startswith("xla_dense"):             # DAS mask prep
+            flops += float(m) * k * block
+        return flops / peak + bytes_ / bw
+
+    if op == "sparse_attn":
+        flops = 4.0 * hq * lq * lk * d
+        bytes_ = 2.0 * hkv * lk * d * 4.0 + 2.0 * hq * lq * d * 4.0
+        if impl == "xla_flash":
+            chunk = block_k or min(512, lk)
+            steps = max(1, -(-lk // chunk))
+        else:                                        # pallas / interpret
+            bq = min(block_m or 128, max(lq, 1))
+            bk = min(block_k or 128, max(lk, 1))
+            steps = hq * max(1, -(-lq // bq)) * max(1, -(-lk // bk))
+        t = flops / peak + bytes_ / bw + steps * _STEP_OVERHEAD_S
+        return t * (_INTERPRET_PENALTY if impl == "interpret" else 1.0)
+
+    raise ValueError(f"kernel_cost: unknown op {op!r}")
 
 
 def e2e(m: ModelShape, hw: HardwareSpec, opt: TenetOpt, *, prefill_tl: int,

@@ -109,11 +109,11 @@ def das_gemv(values: jax.Array, indices: jax.Array, w_trits: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _das_ternary_gemm_kernel(vals_ref, idx_ref, p_ref, wscale_ref, out_ref, *,
-                             n_k: int, keep: int, block: int):
-    """grid = (M/bm, N/bn, K/K_SLAB).
+                             n_k: int, keep: int, block: int, k_tile: int):
+    """grid = (M/bm, N/bn, K/k_tile) with k_tile a multiple of K_SLAB.
 
-    vals/idx: (bm, bkc) compacted slab (bkc = K_SLAB*keep/block),
-    p: (KP_SLAB, bn) uint8 base-3 packed weights, out: (bm, bn) f32.
+    vals/idx: (bm, bkc) compacted slab (bkc = k_tile*keep/block),
+    p: (k_tile/5, bn) uint8 base-3 packed weights, out: (bm, bn) f32.
     """
     k = pl.program_id(2)
 
@@ -122,9 +122,9 @@ def _das_ternary_gemm_kernel(vals_ref, idx_ref, p_ref, wscale_ref, out_ref, *,
         out_ref[...] = jnp.zeros_like(out_ref)
 
     vals = vals_ref[...].astype(jnp.float32)        # (bm, bkc)
-    local = idx_ref[...] - k * K_SLAB               # absolute -> tile-local
+    local = idx_ref[...] - k * k_tile               # absolute -> tile-local
     bm, bkc = vals.shape
-    nb = K_SLAB // block                            # DAS blocks per slab
+    nb = k_tile // block                            # DAS blocks per K tile
     # block-local scatter (the butterfly router): every compacted column c
     # belongs to block c // keep, so only a `block`-wide compare is needed —
     # keep == block degrades to the identity permutation (dense fallback).
@@ -133,9 +133,9 @@ def _das_ternary_gemm_kernel(vals_ref, idx_ref, p_ref, wscale_ref, out_ref, *,
     lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, block), 2)
     hit = loc_b[:, :, None] == lanes                # (bm*nb, keep, block)
     dense = jnp.sum(jnp.where(hit, vals_b[:, :, None], 0.0), axis=1)
-    dense = dense.reshape(bm, K_SLAB)
-    # TWD decode of the 64B:80B slab on the VPU, then the MXU slab dot
-    w = _decode_block(p_ref[...]).astype(jnp.float32)   # (K_SLAB, bn)
+    dense = dense.reshape(bm, k_tile)
+    # TWD decode of the 64B:80B slab(s) on the VPU, then the MXU slab dot
+    w = _decode_block(p_ref[...]).astype(jnp.float32)   # (k_tile, bn)
     out_ref[...] += jax.lax.dot(dense, w, preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)
@@ -146,13 +146,17 @@ def _das_ternary_gemm_kernel(vals_ref, idx_ref, p_ref, wscale_ref, out_ref, *,
 def das_ternary_gemm(values: jax.Array, indices: jax.Array,
                      packed: jax.Array, w_scale: jax.Array, *, keep: int,
                      block: int = BLOCK, block_m: int = 8,
-                     block_n: int = 256, interpret: bool = False) -> jax.Array:
+                     block_n: int = 256, block_k: int = 1,
+                     interpret: bool = False) -> jax.Array:
     """(M, Kc) compacted values/indices  x  base-3 packed (K/5, N) -> (M, N).
 
     Kc = K * keep / block; indices are absolute K-lane ids, block-sorted
     ascending (core.das.das_compact output).  K must tile by the 320-trit
     (64-byte) TWD slab and `block` must divide the slab.  Weights stay
     packed in HBM; activations enter compacted — the fused DAS+TWD datapath.
+    Tile shapes are autotuner parameters: ``block_m``/``block_n`` degrade to
+    divisors of M/N, ``block_k`` is the number of 320-trit slabs scattered +
+    decoded per K step (degraded to a divisor of K/320).
     """
     m, kc = values.shape
     kp, n = packed.shape
@@ -166,24 +170,29 @@ def das_ternary_gemm(values: jax.Array, indices: jax.Array,
         raise ValueError(f"DAS block {block} must divide the {K_SLAB}-trit slab")
     if not (0 < keep <= block):
         raise ValueError(f"keep={keep} out of range for block {block}")
-    bkc = K_SLAB // block * keep
+    n_slab = kdim // K_SLAB
+    bk = max(1, min(block_k, n_slab))
+    while n_slab % bk:
+        bk -= 1
+    k_tile = bk * K_SLAB
+    bkc = k_tile // block * keep
     bm = min(block_m, m)
     while m % bm:
         bm -= 1
     bn = min(block_n, n)
     while n % bn:
         bn -= 1
-    n_k = kdim // K_SLAB
+    n_k = n_slab // bk
 
     kernel = functools.partial(_das_ternary_gemm_kernel, n_k=n_k, keep=keep,
-                               block=block)
+                               block=block, k_tile=k_tile)
     return pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn, n_k),
         in_specs=[
             pl.BlockSpec((bm, bkc), lambda i, j, k: (i, k)),
             pl.BlockSpec((bm, bkc), lambda i, j, k: (i, k)),
-            pl.BlockSpec((KP_SLAB, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk * KP_SLAB, bn), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),

@@ -1,13 +1,34 @@
-"""jit'd public wrappers around the Pallas kernels with XLA fallbacks.
+"""jit'd public wrappers around the kernels with backend-aware dispatch.
 
-Dispatch policy: Pallas on TPU backends, pure-jnp reference elsewhere
-(`interpret=True` forces the Pallas path in emulation — used by tests and
-CPU benchmarking).  All model code calls through these so the kernel layer
-is swappable per backend without touching the models.
+Kernel modes (``Runtime.kernel_mode`` / ``--kernel-mode``):
+
+  * ``ref``        — pure-jnp reference paths everywhere.
+  * ``interpret``  — Pallas kernels under ``interpret=True`` (emulated; slow
+    but exercises the real grid/BlockSpec code on any backend).
+  * ``pallas``     — compiled Pallas kernels, unconditionally.
+  * ``compiled``   — backend-capability probe: compiled Pallas where the
+    backend supports it (TPU/GPU), ``interpret=True`` otherwise, so one mode
+    runs the same kernel code everywhere.
+  * ``tuned``      — per-shape dispatch from the autotune cache
+    (kernels/autotune.py): Pallas tile configs on TPU/GPU, the XLA-native
+    decode-GEMMs (kernels/xla_gemm.py) on CPU.  Tune eagerly (ServeEngine
+    warmup / ``python -m repro.kernels.autotune``) BEFORE tracing: inside a
+    jit trace the lookup is cache-read-only and falls back to the perfmodel
+    ranking on a miss.
+  * ``auto``       — ``pallas`` on TPU, reference elsewhere (legacy default).
+
+All model code calls through these so the kernel layer is swappable per
+backend without touching the models.  When a kernel mode is requested but a
+shape is inadmissible (``packed_gemm_ok`` / ``fused_das_ok``), the caller
+falls back to the reference path and reports it via :func:`note_fallback` —
+once per shape (the warning fires at trace time, and XLA traces each shape
+once), with counters surfaced in ``ServeEngine`` stats.
 """
 
 from __future__ import annotations
 
+import warnings
+from collections import Counter
 from functools import partial
 
 import jax
@@ -23,20 +44,56 @@ from .ternary_gemm import twd_decode as _twd_decode_pallas
 from .topk_mask import topk_mask as _topk_mask_pallas
 
 __all__ = [
-    "use_pallas", "kernel_wanted", "packed_gemm_ok", "fused_das_ok",
+    "KERNEL_MODES", "backend_kind", "pallas_compiled_ok", "use_pallas",
+    "kernel_wanted", "attn_kernel_wanted", "packed_gemm_ok", "fused_das_ok",
+    "note_fallback", "fallback_counts", "reset_fallbacks",
     "twd_decode", "ternary_gemm", "das_gemv", "das_ternary_gemm",
     "topk_mask", "sparse_attention", "K_SLAB",
 ]
 
+KERNEL_MODES = ("ref", "interpret", "pallas", "compiled", "tuned", "auto")
+
+
+def backend_kind() -> str:
+    """The active JAX backend: "cpu" | "gpu" | "tpu"."""
+    return jax.default_backend()
+
+
+def pallas_compiled_ok() -> bool:
+    """Can Pallas kernels compile natively on this backend?"""
+    return backend_kind() in ("tpu", "gpu")
+
 
 def use_pallas() -> bool:
-    return jax.default_backend() == "tpu"
+    return backend_kind() == "tpu"
 
 
 def kernel_wanted(mode: str) -> bool:
-    """True when `mode` selects a Pallas execution path (compiled or
-    emulated) rather than the pure-jnp reference."""
-    return mode in ("pallas", "interpret") or (mode == "auto" and use_pallas())
+    """True when `mode` selects a non-reference execution path for the
+    ternary linears (Pallas compiled/emulated, or the tuned dispatch)."""
+    return mode in ("pallas", "interpret", "compiled", "tuned") \
+        or (mode == "auto" and use_pallas())
+
+
+def attn_kernel_wanted(mode: str) -> bool:
+    """True when decode attention should route through the Pallas
+    ``sparse_attn`` kernel.  Narrower than :func:`kernel_wanted`:
+    ``interpret`` keeps the XLA flash path (emulated attention per decode
+    step is pathological) and ``tuned`` picks per-shape in the caller."""
+    return mode in ("pallas", "compiled") or (mode == "auto" and use_pallas())
+
+
+def _pallas_opts(mode: str) -> dict | None:
+    """kwargs for a Pallas call under `mode`, or None for the reference."""
+    if mode == "pallas":
+        return {}
+    if mode == "interpret":
+        return {"interpret": True}
+    if mode == "compiled":
+        return {} if pallas_compiled_ok() else {"interpret": True}
+    if mode == "auto" and use_pallas():
+        return {}
+    return None
 
 
 def packed_gemm_ok(k: int, packed_rows: int) -> bool:
@@ -54,12 +111,47 @@ def fused_das_ok(k: int, packed_rows: int, das) -> bool:
             and K_SLAB % das.block == 0 and 0 < das.keep <= das.block)
 
 
+# ---------------------------------------------------------------------------
+# silent-fallback accounting (once-per-shape warnings + counters)
+# ---------------------------------------------------------------------------
+
+_fallbacks: Counter = Counter()
+_fallback_warned: set = set()
+
+
+def note_fallback(op: str, key: tuple, reason: str) -> None:
+    """Record that a kernel mode fell back to the jnp reference for `key`
+    (a hashable shape signature).  Warns once per (op, key); counts every
+    occurrence.  Called at trace time from the dispatchers, so a jitted
+    serving step reports each distinct shape exactly once."""
+    _fallbacks[(op, key)] += 1
+    if (op, key) not in _fallback_warned:
+        _fallback_warned.add((op, key))
+        warnings.warn(
+            f"kernel fallback: {op}{key} -> jnp reference ({reason}); "
+            f"perf-sensitive paths should use slab-aligned shapes",
+            RuntimeWarning, stacklevel=3)
+
+
+def fallback_counts() -> dict:
+    """{(op, shape_key): count} of reference fallbacks since last reset."""
+    return dict(_fallbacks)
+
+
+def reset_fallbacks() -> None:
+    _fallbacks.clear()
+    _fallback_warned.clear()
+
+
+# ---------------------------------------------------------------------------
+# op wrappers
+# ---------------------------------------------------------------------------
+
 def twd_decode(packed: jax.Array, k: int, *, mode: str = "auto") -> jax.Array:
     """uint8 (Kp, N) -> int8 trits (k, N)."""
-    if mode == "pallas" or (mode == "auto" and use_pallas()):
-        return _twd_decode_pallas(packed)[:k]
-    if mode == "interpret":
-        return _twd_decode_pallas(packed, interpret=True)[:k]
+    opts = _pallas_opts("compiled" if mode == "tuned" else mode)
+    if opts is not None:
+        return _twd_decode_pallas(packed, **opts)[:k]
     return ref.twd_decode_ref(packed, k)
 
 
@@ -67,11 +159,12 @@ def ternary_gemm(x: jax.Array, packed: jax.Array, w_scale: jax.Array,
                  x_scale: jax.Array | None = None, *, mode: str = "auto",
                  **kw) -> jax.Array:
     """(M, K) x base-3-packed (K/5, N) -> (M, N) f32."""
-    if mode == "pallas" or (mode == "auto" and use_pallas()):
-        return _ternary_gemm_pallas(x, packed, w_scale, x_scale, **kw)
-    if mode == "interpret":
-        return _ternary_gemm_pallas(x, packed, w_scale, x_scale,
-                                    interpret=True, **kw)
+    if mode == "tuned":
+        from . import autotune
+        return autotune.run_gemm(x, packed, w_scale, x_scale=x_scale, **kw)
+    opts = _pallas_opts(mode)
+    if opts is not None:
+        return _ternary_gemm_pallas(x, packed, w_scale, x_scale, **opts, **kw)
     k = x.shape[-1]
     return ref.ternary_gemm_packed_ref(x, packed, w_scale, k, x_scale)
 
@@ -79,11 +172,10 @@ def ternary_gemm(x: jax.Array, packed: jax.Array, w_scale: jax.Array,
 def das_gemv(values: jax.Array, indices: jax.Array, w_trits: jax.Array,
              w_scale: jax.Array, *, keep: int, mode: str = "auto",
              **kw) -> jax.Array:
-    if mode == "pallas" or (mode == "auto" and use_pallas()):
-        return _das_gemv_pallas(values, indices, w_trits, w_scale, keep=keep, **kw)
-    if mode == "interpret":
+    opts = _pallas_opts("compiled" if mode == "tuned" else mode)
+    if opts is not None:
         return _das_gemv_pallas(values, indices, w_trits, w_scale, keep=keep,
-                                interpret=True, **kw)
+                                **opts, **kw)
     return ref.das_gemv_ref(values, indices, w_trits, w_scale)
 
 
@@ -92,13 +184,14 @@ def das_ternary_gemm(values: jax.Array, indices: jax.Array,
                      block: int = 32, mode: str = "auto", **kw) -> jax.Array:
     """Fused serving path: (M, Kc) compacted activations x base-3 packed
     (K/5, N) -> (M, N) f32 — DAS scatter + TWD decode + matmul in one pass."""
-    if mode == "pallas" or (mode == "auto" and use_pallas()):
+    if mode == "tuned":
+        from . import autotune
+        return autotune.run_das_gemm(values, indices, packed, w_scale,
+                                     keep=keep, block=block, **kw)
+    opts = _pallas_opts(mode)
+    if opts is not None:
         return _das_ternary_gemm_pallas(values, indices, packed, w_scale,
-                                        keep=keep, block=block, **kw)
-    if mode == "interpret":
-        return _das_ternary_gemm_pallas(values, indices, packed, w_scale,
-                                        keep=keep, block=block,
-                                        interpret=True, **kw)
+                                        keep=keep, block=block, **opts, **kw)
     k = packed.shape[0] * TRITS_PER_BYTE
     return ref.das_ternary_gemm_ref(values, indices, packed, w_scale, k)
 
@@ -108,10 +201,9 @@ def topk_mask(x: jax.Array, *, keep: int, block: int = 32,
     """(…, K) -> int8 mask; leading dims flattened into rows."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if mode == "pallas" or (mode == "auto" and use_pallas()):
-        m = _topk_mask_pallas(x2, keep=keep, block=block, **kw)
-    elif mode == "interpret":
-        m = _topk_mask_pallas(x2, keep=keep, block=block, interpret=True, **kw)
+    opts = _pallas_opts("compiled" if mode == "tuned" else mode)
+    if opts is not None:
+        m = _topk_mask_pallas(x2, keep=keep, block=block, **opts, **kw)
     else:
         m = ref.das_topk_mask_ref(x2, block_size=block, keep=keep).astype(jnp.int8)
     return m.reshape(*lead, x.shape[-1])
@@ -121,23 +213,18 @@ def sparse_attention(q, k, v, q_pos, k_pos, *, sink: int, window: int,
                      softcap: float | None = None, mode: str = "auto",
                      **kw) -> jax.Array:
     """Batched LPSA attention.  q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D);
-    q_pos: (B, Lq); k_pos: (B, Lk).  Returns (B, Hq, Lq, D)."""
-    if mode == "pallas" or (mode == "auto" and use_pallas()):
+    q_pos: (B, Lq); k_pos: (B, Lk).  Returns (B, Hq, Lq, D).  Tile kwargs
+    (``block_q``/``block_k``) pass through to the Pallas kernel.  ``tuned``
+    resolves per-shape in models/attention.py; here it means ``compiled``."""
+    opts = _pallas_opts("compiled" if mode == "tuned" else mode)
+    if opts is not None:
         f = partial(_sparse_attn_pallas, sink=sink, window=window,
-                    softcap=softcap, **kw)
-        return jax.vmap(f)(q, k, v, q_pos, k_pos)
-    if mode == "interpret":
-        f = partial(_sparse_attn_pallas, sink=sink, window=window,
-                    softcap=softcap, interpret=True, **kw)
+                    softcap=softcap, **opts, **kw)
         return jax.vmap(f)(q, k, v, q_pos, k_pos)
 
     def one(qb, kb, vb, qp, kp):
         hq, hkv = qb.shape[0], kb.shape[0]
         n_rep = hq // hkv
-        def head(h_q, h_kv_arrs):
-            kk, vv = h_kv_arrs
-            return ref.sparse_attn_ref(h_q, kk, vv, qp, kp, sink=sink,
-                                       window=window, softcap=softcap)
         kr = jnp.repeat(kb, n_rep, axis=0)
         vr = jnp.repeat(vb, n_rep, axis=0)
         return jax.vmap(lambda a, b, c: ref.sparse_attn_ref(

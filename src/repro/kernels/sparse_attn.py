@@ -81,10 +81,14 @@ def sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if hq % hkv:
         raise ValueError(f"GQA requires Hq % Hkv == 0, got {hq}, {hkv}")
     n_rep = hq // hkv
+    # tile shapes are autotuner parameters — degrade to divisors so every
+    # candidate is runnable on awkward ring-cache lengths
     bq = min(block_q, lq)
+    while lq % bq:
+        bq -= 1
     bk = min(block_k, lk)
-    if lq % bq or lk % bk:
-        raise ValueError(f"(Lq,Lk)=({lq},{lk}) not tileable by ({bq},{bk})")
+    while lk % bk:
+        bk -= 1
     n_kb = lk // bk
 
     kernel = functools.partial(

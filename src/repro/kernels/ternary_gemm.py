@@ -97,11 +97,15 @@ def _ternary_gemm_kernel(x_ref, p_ref, wscale_ref, xscale_ref, out_ref, *,
 
 def ternary_gemm(x: jax.Array, packed: jax.Array, w_scale: jax.Array,
                  x_scale: jax.Array | None = None, *, block_m: int = 128,
-                 block_n: int = 256, interpret: bool = False) -> jax.Array:
+                 block_n: int = 256, block_k: int = 1,
+                 interpret: bool = False) -> jax.Array:
     """Y[f32] = (x ⊙ rowscale) @ dequant(packed) — weights never unpacked in HBM.
 
     x: (M, K) int8 | bf16 | f32;  packed: (K/5, N) uint8;  w_scale: scalar;
     x_scale: (M, 1) f32 per-row activation scale (int8 path) or None.
+    Tile shapes are autotuner parameters: ``block_m``/``block_n`` bound the
+    output tile (degraded to divisors of M/N), ``block_k`` is the number of
+    320-trit slabs decoded per K step (degraded to a divisor of K/320).
     """
     m, kdim = x.shape
     kp, n = packed.shape
@@ -115,7 +119,11 @@ def ternary_gemm(x: jax.Array, packed: jax.Array, w_scale: jax.Array,
     bn = min(block_n, n)
     if m % bm or n % bn:
         raise ValueError(f"(M,N)=({m},{n}) not tileable by ({bm},{bn})")
-    n_k = kdim // K_SLAB
+    n_slab = kdim // K_SLAB
+    bk = max(1, min(block_k, n_slab))
+    while n_slab % bk:
+        bk -= 1
+    n_k = n_slab // bk
     if x_scale is None:
         x_scale = jnp.ones((m, 1), jnp.float32)
     w_scale = jnp.asarray(w_scale, jnp.float32).reshape(1, 1)
@@ -126,8 +134,8 @@ def ternary_gemm(x: jax.Array, packed: jax.Array, w_scale: jax.Array,
         kernel,
         grid=(m // bm, n // bn, n_k),
         in_specs=[
-            pl.BlockSpec((bm, K_SLAB), lambda i, j, k: (i, k)),
-            pl.BlockSpec((KP_SLAB, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bk * K_SLAB), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk * KP_SLAB, bn), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
             pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
         ],

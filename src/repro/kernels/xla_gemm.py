@@ -1,0 +1,117 @@
+"""XLA-native ternary decode-GEMMs — the tuned CPU/GPU serving datapath.
+
+Compiled Pallas is TPU/GPU-only; on an XLA-CPU backend the Pallas kernels
+only run under `interpret=True` (orders of magnitude slower than XLA's own
+codegen).  These implementations are the backend-appropriate realization of
+the same TENET datapath — weights stay base-3 packed in memory and decode
+fuses into the matmul — expressed as ops XLA compiles well.  The autotuner
+(`kernels/autotune.py`) ranks them against the Pallas tile configs per
+shape+backend and `tlin_apply(kernel_mode="tuned")` dispatches the winner.
+
+The workhorse is the *strided 5-way split* decode (`f32dec_matmul`): byte
+column g packs k-lanes 5g..5g+4, digit j of every byte belongs to x column
+j::5, so
+
+    for j in 0..4:  q = floor(p/3);  d_j = p - 3q - 1;  p = q
+                    acc += x[:, j::5] @ d_j
+
+peels one trit plane per iteration with float arithmetic (exact for values
+< 243) and never materializes the interleaved (K, N) weight matrix.  On
+XLA-CPU this is ~2-2.5x faster than decode-then-matmul at decode shapes
+(M<=8) — the margin that flips `benchmarks/baseline.json` to fused < dense.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import das as das_lib
+from repro.core import twd
+
+__all__ = [
+    "f32dec_matmul", "plain_matmul", "decode_matmul", "scatter_dense",
+    "masked_dense", "XLA_GEMM_IMPLS",
+]
+
+TRITS_PER_BYTE = twd.TRITS_PER_BYTE
+
+# dense decode-GEMM implementations selectable by the autotuner; the
+# "xla_dense_*" aliases are the same GEMMs fed DAS-mask-densified activations
+XLA_GEMM_IMPLS = ("xla_f32dec", "xla_plain", "xla_dense_f32dec",
+                  "xla_dense_plain")
+
+
+def f32dec_matmul(x: jax.Array, packed: jax.Array, w_scale: jax.Array,
+                  x_scale: jax.Array | None = None) -> jax.Array:
+    """(M, K) f32 @ dequant(packed[:K/5]) via the strided 5-way split.
+
+    Requires K % 5 == 0; export row padding beyond K/5 is sliced off.
+    """
+    m, k = x.shape
+    if k % TRITS_PER_BYTE:
+        raise ValueError(f"f32dec_matmul needs K % 5 == 0, got K={k}")
+    pf = packed[: k // TRITS_PER_BYTE].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    acc = None
+    for j in range(TRITS_PER_BYTE):
+        q = jnp.floor(pf / 3.0)
+        dj = pf - 3.0 * q - 1.0          # trit plane j in {-1, 0, +1}
+        pf = q
+        t = xf[:, j::TRITS_PER_BYTE] @ dj
+        acc = t if acc is None else acc + t
+    y = acc * jnp.asarray(w_scale, jnp.float32)
+    if x_scale is not None:
+        y = y * x_scale
+    return y
+
+
+def plain_matmul(x: jax.Array, packed: jax.Array, w_scale: jax.Array,
+                 x_scale: jax.Array | None = None) -> jax.Array:
+    """Decode-then-matmul on the arithmetic unpack (any K, incl. K % 5 != 0)."""
+    m, k = x.shape
+    w = twd.unpack_ternary_arith(packed, k).astype(jnp.float32)
+    y = (x.astype(jnp.float32) @ w) * jnp.asarray(w_scale, jnp.float32)
+    if x_scale is not None:
+        y = y * x_scale
+    return y
+
+
+def decode_matmul(x: jax.Array, packed: jax.Array, w_scale: jax.Array, *,
+                  impl: str, x_scale: jax.Array | None = None) -> jax.Array:
+    """Dispatch one of XLA_GEMM_IMPLS on dense (already masked) activations."""
+    if impl.endswith("f32dec"):
+        return f32dec_matmul(x, packed, w_scale, x_scale)
+    if impl.endswith("plain"):
+        return plain_matmul(x, packed, w_scale, x_scale)
+    raise ValueError(f"decode_matmul: unknown impl {impl!r}")
+
+
+def scatter_dense(values: jax.Array, indices: jax.Array, k: int, *,
+                  keep: int, block: int) -> jax.Array:
+    """Compacted (M, Kc) values/abs-indices -> dense-masked (M, K).
+
+    The XLA-CPU form of the butterfly router's inverse: a block-local
+    compare-select (gathers are catastrophically slow on this backend).
+    Exactly equals x * das_mask(x) for das_compact output.
+    """
+    m, kc = values.shape
+    nb = k // block
+    vals = values.reshape(m, nb, keep)
+    loc = indices.reshape(m, nb, keep) % block
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (1, 1, keep, block), 3)
+    hit = loc[..., None] == lanes
+    dense = jnp.sum(jnp.where(hit, vals[..., None].astype(jnp.float32), 0.0),
+                    axis=2)
+    return dense.reshape(m, k)
+
+
+def masked_dense(x: jax.Array, *, keep: int, block: int) -> jax.Array:
+    """Dense DAS-masked activations via the rank-compare mask (no top-k sort).
+
+    The shared per-token prep of the tuned CPU path: one mask feeds every
+    sibling projection, and das_mask handles non-block-divisible K with a
+    dense tail (bitnet d_ff=5460).
+    """
+    mask = das_lib.das_mask(x, block_size=block, keep=keep)
+    return (x * mask.astype(x.dtype)).astype(jnp.float32)

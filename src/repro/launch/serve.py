@@ -77,10 +77,14 @@ def main(argv=None):
     ap.add_argument("--no-sparse", action="store_true",
                     help="full attention + full KV cache (naive baseline)")
     ap.add_argument("--kernel-mode", default="ref",
-                    choices=["ref", "interpret", "pallas", "auto"],
-                    help="ternary-linear execution path; kernel modes route "
-                         "slab-aligned packed+DAS layers through the fused "
-                         "das_ternary_gemm datapath")
+                    choices=["ref", "interpret", "pallas", "compiled",
+                             "tuned", "auto"],
+                    help="ternary-linear execution path (kernels/ops."
+                         "KERNEL_MODES); kernel modes route slab-aligned "
+                         "packed+DAS layers through the fused "
+                         "das_ternary_gemm datapath; 'tuned' autotunes "
+                         "per-shape at engine construction and caches "
+                         "winners on disk (see kernels/autotune.py)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 

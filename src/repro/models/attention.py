@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import lpsa as lpsa_lib
+from repro.kernels import ops
 from repro.models import layers as L
 from repro.models.ternary_linear import tlin_apply, tlin_compact, tlin_init
 
@@ -196,8 +197,46 @@ def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     cache = kvcache.attn_write(cache, k, v, t, sink=sink, window=window,
                                ring=ring)
     k_all, v_all, k_pos = kvcache.attn_read(cache)       # k_pos (B, S)
-    o = flash_masked(q, k_all, v_all, pos, k_pos, sink=sink, window=window,
-                     softcap=cfg.attn_softcap,
-                     kv_chunk=min(512, k_all.shape[1]))
+    o = _decode_attention(cfg, q, k_all, v_all, pos, k_pos, sink=sink,
+                          window=window, kernel_mode=kernel_mode)
     o = o.reshape(b, 1, cfg.q_dim)
     return tlin_apply(p["wo"], o, cfg.ternary, kernel_mode=kernel_mode), cache
+
+
+def _decode_attention(cfg: ModelConfig, q, k, v, q_pos, k_pos, *, sink: int,
+                      window: int, kernel_mode: str) -> jax.Array:
+    """Route the one-token attention step by kernel mode.
+
+    q: (B, Lq, Hq, D); k, v: (B, Lk, Hkv, D); q_pos (B, Lq); k_pos (B, Lk).
+    ``pallas``/``compiled`` go through the Pallas LPSA kernel; ``tuned``
+    resolves the per-shape winner from the autotune cache — Pallas tiles
+    where they compile, the chunked XLA flash (with the tuned kv-chunk)
+    otherwise; everything else keeps `flash_masked`, which shares the
+    decode step's per-token compaction budget with the ternary linears
+    (one fused LPSA+DAS decode trace).
+    """
+    b, lq, hq, d = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    kv_chunk = min(512, lk)
+    tiles: dict = {}
+    route_pallas = ops.attn_kernel_wanted(kernel_mode)
+    if kernel_mode == "tuned":
+        from repro.kernels import autotune
+        tcfg = autotune.lookup(
+            "sparse_attn", **autotune.attn_dims(hq=hq, hkv=hkv, lq=lq, lk=lk,
+                                                d=d, sink=sink, window=window))
+        if tcfg.impl == "pallas":
+            route_pallas = True
+            tiles = {"block_q": tcfg.block_m or 128,
+                     "block_k": tcfg.block_k or 128}
+        else:   # xla_flash winner (or interpret/ref: emulated per-token
+            # attention is pathological — keep the XLA flash path)
+            kv_chunk = tcfg.block_k or kv_chunk
+    if route_pallas:
+        o = ops.sparse_attention(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2), q_pos,
+            k_pos, sink=sink, window=window, softcap=cfg.attn_softcap,
+            mode="pallas" if kernel_mode == "tuned" else kernel_mode, **tiles)
+        return o.swapaxes(1, 2)
+    return flash_masked(q, k, v, q_pos, k_pos, sink=sink, window=window,
+                        softcap=cfg.attn_softcap, kv_chunk=kv_chunk)

@@ -28,6 +28,8 @@ composition):
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
@@ -37,7 +39,18 @@ from repro.core import ternary as tq
 from repro.core import twd
 from repro.kernels import ops
 
-__all__ = ["tlin_init", "tlin_apply", "tlin_compact", "export_tlin"]
+__all__ = ["tlin_init", "tlin_apply", "tlin_compact", "export_tlin",
+           "MaskedActivation"]
+
+
+class MaskedActivation(NamedTuple):
+    """Densified DAS-masked activations — the tuned-mode shared prep when the
+    autotuned impl is one of the ``xla_dense_*`` decode-GEMMs (a rank-compare
+    mask is ~5x cheaper than the top-k compaction on XLA-CPU).  Produced by
+    `tlin_compact`, consumed by `tlin_apply` via ``ca=`` like its compacted
+    sibling `core.das.CompactActivation`."""
+
+    x: jax.Array   # (..., K) f32, dropped lanes zeroed
 
 
 def tlin_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32,
@@ -68,12 +81,70 @@ def tlin_compact(x: jax.Array, tc: TernaryConfig,
         return None
     if not ops.kernel_wanted(kernel_mode):
         return None
+    if kernel_mode == "tuned":
+        # the prep representation follows the tuned impl: xla_dense_* wants a
+        # densified mask (shared across siblings), everything else compacted
+        if p is None or "packed" not in p:
+            return None
+        from repro.kernels import autotune, xla_gemm
+        k = x.shape[-1]
+        m = 1
+        for s in x.shape[:-1]:
+            m *= s
+        cfg = autotune.lookup("das_ternary_gemm", m=m, k=k,
+                              n=p["packed"].shape[1], keep=tc.das.keep,
+                              block=tc.das.block)
+        if cfg.impl.startswith("xla_dense"):
+            return MaskedActivation(
+                xla_gemm.masked_dense(x, keep=tc.das.keep,
+                                      block=tc.das.block))
+        if cfg.impl == "ref" or k % tc.das.block:
+            return None
+        return das_lib.das_compact(x, block_size=tc.das.block,
+                                   keep=tc.das.keep)
     if p is not None:
         if "packed" not in p:
             return None
         if not ops.fused_das_ok(x.shape[-1], p["packed"].shape[0], tc.das):
             return None
     return das_lib.das_compact(x, block_size=tc.das.block, keep=tc.das.keep)
+
+
+def _apply_packed_tuned(p: dict, x2: jax.Array, tc: TernaryConfig,
+                        ca) -> jax.Array:
+    """Tuned-mode serving matmul: per-shape impl from the autotune cache.
+
+    Trace-safe — `autotune.lookup` only reads the cache (perfmodel ranking on
+    a miss); tuning happened eagerly in the ServeEngine warmup.  Unlike the
+    Pallas modes this covers *any* K: the ``xla_dense_*`` impls mask with a
+    dense tail, so e.g. bitnet's d_ff=5460 stays on a tuned path.
+    """
+    from repro.kernels import autotune, xla_gemm
+    m, k = x2.shape
+    scale = p["scale"]
+    n = p["packed"].shape[1]
+    if tc.das is None:
+        return ops.ternary_gemm(x2, p["packed"], scale, mode="tuned")
+    cfg = autotune.lookup("das_ternary_gemm", m=m, k=k, n=n,
+                          keep=tc.das.keep, block=tc.das.block)
+    if cfg.impl.startswith("xla_dense"):
+        xs = ca.x.reshape(-1, k) if isinstance(ca, MaskedActivation) \
+            else xla_gemm.masked_dense(x2, keep=tc.das.keep,
+                                       block=tc.das.block)
+        return xla_gemm.decode_matmul(xs, p["packed"], scale, impl=cfg.impl)
+    if cfg.impl == "ref" or k % tc.das.block:
+        ops.note_fallback("das_ternary_gemm", (m, k, n),
+                          "no tuned candidate for this shape")
+        xs = _das_maybe(x2, tc)
+        w = twd.unpack_ternary_arith(p["packed"], k)
+        return (xs.astype(jnp.float32) @ w.astype(jnp.float32)) * scale
+    if not isinstance(ca, das_lib.CompactActivation):
+        ca = das_lib.das_compact(x2, block_size=tc.das.block,
+                                 keep=tc.das.keep)
+    kc = ca.values.shape[-1]
+    return autotune.run_das_gemm(
+        ca.values.reshape(-1, kc), ca.indices.reshape(-1, kc), p["packed"],
+        scale, keep=tc.das.keep, block=tc.das.block, cfg=cfg)
 
 
 def _apply_packed(p: dict, x: jax.Array, tc: TernaryConfig,
@@ -83,7 +154,9 @@ def _apply_packed(p: dict, x: jax.Array, tc: TernaryConfig,
     lead = x.shape[:-1]
     scale = p["scale"]
     kp = p["packed"].shape[0]
-    if ops.kernel_wanted(kernel_mode) and ops.fused_das_ok(k, kp, tc.das):
+    if kernel_mode == "tuned":
+        y = _apply_packed_tuned(p, x.reshape(-1, k), tc, ca)
+    elif ops.kernel_wanted(kernel_mode) and ops.fused_das_ok(k, kp, tc.das):
         # fused path: compacted activations straight into the kernel
         if ca is None:
             ca = das_lib.das_compact(x, block_size=tc.das.block,
@@ -98,6 +171,10 @@ def _apply_packed(p: dict, x: jax.Array, tc: TernaryConfig,
         y = ops.ternary_gemm(xs.reshape(-1, k), p["packed"], scale,
                              mode=kernel_mode)
     else:  # shapes a kernel can't tile (or ref mode): pure-jnp reference
+        if ops.kernel_wanted(kernel_mode):
+            ops.note_fallback("ternary_gemm", (k, p["packed"].shape[1]),
+                              f"K={k} not tileable by the {ops.K_SLAB}-trit "
+                              f"slab (packed rows {kp})")
         xs = _das_maybe(x, tc)
         w = twd.unpack_ternary_arith(p["packed"], k)
         y = jnp.einsum("mk,kn->mn", xs.reshape(-1, k).astype(jnp.float32),

@@ -31,13 +31,14 @@ finish): the baseline the benchmarks compare against.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models import attention as A
 from repro.models import model as MD
 from repro.models.transformer import Runtime
@@ -78,6 +79,11 @@ class EngineStats:
     generated_tokens: int = 0     # sampled tokens delivered to requests
     prefill_tokens: int = 0       # prompt tokens absorbed via batch-1 prefill
     wall_seconds: float = 0.0
+    autotune_timed_runs: int = 0  # timed candidate runs spent in warmup
+                                  # (0 when the on-disk cache was already hot)
+    kernel_fallbacks: dict = field(default_factory=dict)
+                                  # "op(shape)" -> count of silent jnp-ref
+                                  # fallbacks observed (kernels/ops counters)
 
     @property
     def slot_utilization(self) -> float:
@@ -104,10 +110,18 @@ class ServeEngine:
     static for the jitted step (0 = unrestricted); per-request temperature
     is dynamic.  ``policy``: "continuous" (default) or "wave" (lock-step
     gang-scheduling baseline).  ``kernel_mode`` overrides ``rt.kernel_mode``
-    ("ref" | "interpret" | "pallas" | "auto") — with packed weights and DAS
-    enabled the kernel modes route decode through the fused
-    ``das_ternary_gemm`` datapath (compacted activations straight against
-    base-3 packed weights) on every slab-aligned layer.
+    (see kernels/ops.KERNEL_MODES) — with packed weights and DAS enabled
+    the kernel modes route decode through the fused ``das_ternary_gemm``
+    datapath (compacted activations straight against base-3 packed weights)
+    on every slab-aligned layer.
+
+    ``kernel_mode="tuned"`` additionally runs an eager autotune warmup at
+    construction: every (op, shape) the jitted decode/prefill steps will
+    trace is tuned via kernels/autotune (perfmodel-ranked candidates
+    confirmed by timed runs) and persisted to the on-disk cache, so a second
+    engine over the same shapes constructs with ZERO timed runs
+    (``stats.autotune_timed_runs``).  Re-tune (delete the cache file) after
+    changing backends — jit traces bake the config chosen at trace time.
     """
 
     def __init__(self, cfg: ModelConfig, sparams: dict,
@@ -147,6 +161,9 @@ class ServeEngine:
         self._sampler = make_sampler(top_k)
         self._top_k = top_k
 
+        if rt.kernel_mode == "tuned":
+            self._autotune_warmup()   # eager: must precede any jit trace
+
         self._prefill = jax.jit(
             lambda sp, x: MD.prefill(sp, cfg, x, rt, max_len=max_len))
         self._step = jax.jit(self._step_fn, donate_argnums=(1,))
@@ -154,6 +171,41 @@ class ServeEngine:
         self._sample1 = jax.jit(
             lambda lg, uid, temp: sample_token(
                 lg, self._fold_key(uid, jnp.int32(0)), temp, top_k))
+
+    def _autotune_warmup(self) -> None:
+        """Tune every (op, shape) the serving steps will trace, eagerly.
+
+        GEMM shapes: the standard transformer projection pairs at the decode
+        row count (``max_slots``) and the streaming-prefill pack length
+        (``self._chunk``).  Attention: one entry per layer-kind
+        (sink, window) at the decode cache length.  Shapes that miss at
+        trace time (exotic archetypes, odd prefill prefixes) fall back to
+        the deterministic perfmodel ranking — same impl family, still zero
+        timed runs inside the trace.
+        """
+        from repro.kernels import autotune
+        cfg, tc, rt = self.cfg, self.cfg.ternary, self.rt
+        cache = autotune.default_cache()
+        before = cache.timed_runs
+        das = tc.das if (tc.enabled and tc.das is not None) else None
+        pairs = {(cfg.d_model, cfg.q_dim), (cfg.d_model, cfg.kv_dim),
+                 (cfg.q_dim, cfg.d_model), (cfg.d_model, cfg.d_ff),
+                 (cfg.d_ff, cfg.d_model)}
+        for m in sorted({self.max_slots, self._chunk}):
+            for k, n in sorted(pairs):
+                if das is not None:
+                    autotune.tune("das_ternary_gemm", cache=cache, m=m, k=k,
+                                  n=n, keep=das.keep, block=das.block)
+                else:
+                    autotune.tune("ternary_gemm", cache=cache, m=m, k=k, n=n,
+                                  keep=0, block=0)
+        for kind in set(cfg.layer_kinds()) & {"attn", "local"}:
+            sink, window = A.kind_sink_window(cfg, kind, rt.serve_sparse)
+            lk = (sink + window) if sink < A.FULL_SINK else self.max_len
+            autotune.tune("sparse_attn", cache=cache, **autotune.attn_dims(
+                hq=cfg.n_heads, hkv=cfg.n_kv_heads, lq=1, lk=lk,
+                d=cfg.head_dim_, sink=sink, window=window))
+        self.stats.autotune_timed_runs += cache.timed_runs - before
 
     # -- jitted pieces ----------------------------------------------------
 
@@ -224,7 +276,9 @@ class ServeEngine:
         if self.num_active or self.scheduler:
             raise RuntimeError("reset_clock on a non-drained engine")
         self.vtime = 0
-        self.stats = EngineStats(max_slots=self.max_slots)
+        self.stats = EngineStats(
+            max_slots=self.max_slots,
+            autotune_timed_runs=self.stats.autotune_timed_runs)
 
     def timed_replay(self, trace) -> dict[int, RequestResult]:
         """Replay `trace` twice — once to pay the XLA compiles, then timed
@@ -251,6 +305,12 @@ class ServeEngine:
                 continue
             self.step_decode()
         self.stats.wall_seconds += time.perf_counter() - t0
+        # surface silent jnp-reference fallbacks (process-wide counters; a
+        # populated dict under a kernel mode means some layer shapes are not
+        # slab-aligned and are quietly running the slow reference path)
+        self.stats.kernel_fallbacks = {
+            f"{op}{key}": cnt for (op, key), cnt in
+            ops.fallback_counts().items()}
         out, self._results = self._results, {}
         return out
 
