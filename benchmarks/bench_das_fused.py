@@ -104,6 +104,7 @@ def run():
 
     d_act, f_act, w_bytes = _hbm_bytes(K, N, KEEP, BLOCK)
     d_bytes, f_bytes = d_act + w_bytes, f_act + w_bytes
+    kv_dense, kv_paged = _kv_pool_bytes()
     return [
         {"name": "das_fused/dense_path_ref", "us_per_call": us_dense / M,
          "derived": f"M={M};K={K};N={N}"},
@@ -118,4 +119,21 @@ def run():
          "derived": (f"act_ratio={f_act / d_act:.3f};"
                      f"total_ratio={f_bytes / d_bytes:.3f};"
                      f"dense_B={d_bytes};fused_B={f_bytes}")},
+        {"name": "das_fused/kv_pool_model", "us_per_call": 0.0,
+         "derived": (f"paged_ratio={kv_paged / kv_dense:.3f};"
+                     f"dense_B={kv_dense};paged_B={kv_paged}")},
     ]
+
+
+def _kv_pool_bytes(*, slots=M, max_len=64, page=8, live_tokens=96,
+                   n_layers=4, hkv=2, dh=32):
+    """Serving-cache side of the memory story: per-slot dense full caches
+    pin slots * max_len KV rows per layer up front, while the block-paged
+    pool (serve.ServeConfig(layout="paged")) pins only the pages live
+    tokens touch — here the trace midpoint of the serve bench (K/V f32
+    pairs + the int32 position map, per layer)."""
+    row = (2 * hkv * dh * 4) + 4            # K+V f32 row + pos int32
+    dense = slots * max_len * row * n_layers
+    pages = -(-live_tokens // page)
+    paged = pages * page * row * n_layers
+    return dense, paged

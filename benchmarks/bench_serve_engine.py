@@ -9,20 +9,37 @@ gaps in virtual decode steps, mixed prompt/generation lengths) through
                  shared-position serving model.
   * continuous — per-slot admission/retirement over per-sequence KV state.
 
+plus the block-paged KV pool (ServeConfig(layout="paged")) on full-attention
+caches:
+
+  * paged        — the same Poisson trace through the paged engine, with a
+                   bitwise token-parity check against a per-slot dense
+                   engine at the same max_len, reporting peak pool memory
+                   (pages x per-page bytes) next to µs/step.
+  * paged_prefix — a shared-prefix trace (common prompt stem) where the
+                   radix trie must absorb strictly fewer prompt tokens via
+                   prefill than the sharing-disabled engine.
+
 Reports decode tok/s and p50/p95 per-request latency (in virtual decode
 steps, so the comparison is deterministic) plus the measured wall-clock
-throughput ratio.
+throughput ratio.  Set TENET_POOL_METRICS=<path> to drop the paged pool
+occupancy stats as JSON (CI uploads it as an artifact).
 """
+import json
+import os
+
 import numpy as np
 
 from benchmarks.common import tiny_lm
 from repro.models import model as MD
 from repro.models.transformer import Runtime
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine
 
 SLOTS = 4
 N_REQ = 12
 MEAN_GAP = 3.0       # mean inter-arrival, virtual decode steps
+PAGE = 8
+PAGED_MAX_LEN = 72   # trace worst case (47 + 19) rounded up to a page
 
 
 def poisson_trace(cfg, n=N_REQ, seed=0):
@@ -39,10 +56,21 @@ def poisson_trace(cfg, n=N_REQ, seed=0):
     return reqs
 
 
-def _run_policy(cfg, sparams, rt, policy, max_len):
-    eng = ServeEngine(cfg, sparams, rt, max_slots=SLOTS, max_len=max_len,
-                      policy=policy)
-    results = eng.timed_replay(poisson_trace(cfg))
+def shared_prefix_trace(cfg, n=8, stem=32, tail=6, seed=1):
+    """n prompts sharing a stem-token prefix, arriving far enough apart
+    that the first finishes registering before the rest hit the trie."""
+    rng = np.random.default_rng(seed)
+    stem_toks = rng.integers(0, cfg.vocab, stem)
+    reqs = []
+    for i in range(n):
+        prompt = np.concatenate([stem_toks,
+                                 rng.integers(0, cfg.vocab, tail)])
+        reqs.append(Request(uid=i, prompt=np.asarray(prompt, np.int32),
+                            max_new_tokens=8, arrival=6 * i))
+    return reqs
+
+
+def _summarize(eng, results):
     lat = np.asarray([r.latency_steps for r in results.values()])
     st = eng.stats
     return {
@@ -53,6 +81,55 @@ def _run_policy(cfg, sparams, rt, policy, max_len):
         "util": st.slot_utilization,
         "wall_us": st.wall_seconds * 1e6,
     }
+
+
+def _run_policy(cfg, sparams, rt, policy, max_len):
+    eng = ServeEngine(cfg, sparams, rt,
+                      config=ServeConfig(max_slots=SLOTS, max_len=max_len,
+                                         policy=policy))
+    return _summarize(eng, eng.timed_replay(poisson_trace(cfg)))
+
+
+def _run_paged(cfg, sparams):
+    """Paged vs per-slot dense on full-attention caches (serve_sparse off
+    keeps the global layers full so they become page arenas)."""
+    rt = Runtime(serve_sparse=False)
+    dense = ServeEngine(cfg, sparams, rt,
+                        config=ServeConfig(max_slots=SLOTS,
+                                           max_len=PAGED_MAX_LEN))
+    ref = dense.timed_replay(poisson_trace(cfg))
+    # prefix sharing off: random prompts share nothing, and without trie
+    # retention the pool-peak metric shows pure lazy allocation (used
+    # memory ~ live tokens); the shared-prefix row covers the trie
+    paged = ServeEngine(cfg, sparams, rt,
+                        config=ServeConfig(max_slots=SLOTS,
+                                           max_len=PAGED_MAX_LEN,
+                                           layout="paged", page_size=PAGE,
+                                           prefix_sharing=False))
+    got = paged.timed_replay(poisson_trace(cfg))
+    for uid in ref:   # paged must be a pure layout change, not a new model
+        assert np.array_equal(ref[uid].tokens, got[uid].tokens), \
+            f"paged tokens diverged from per-slot dense for uid {uid}"
+    return paged, _summarize(paged, got)
+
+
+def _run_prefix(cfg, sparams):
+    rt = Runtime(serve_sparse=False)
+    engines = {}
+    for share in (True, False):
+        eng = ServeEngine(cfg, sparams, rt,
+                          config=ServeConfig(max_slots=SLOTS,
+                                             max_len=PAGED_MAX_LEN,
+                                             layout="paged", page_size=PAGE,
+                                             prefix_sharing=share))
+        for r in shared_prefix_trace(cfg):
+            eng.submit(r)
+        eng.run()
+        engines[share] = eng
+    on, off = engines[True], engines[False]
+    assert on.stats.prefill_tokens < off.stats.prefill_tokens, \
+        "prefix sharing failed to reduce prefilled prompt tokens"
+    return on, off
 
 
 def run():
@@ -80,4 +157,44 @@ def run():
                     f"p50={w['p50']/max(c['p50'],1e-9):.2f}x;"
                     f"p95={w['p95']/max(c['p95'],1e-9):.2f}x"),
     })
+
+    paged_eng, pr = _run_paged(cfg, sparams)
+    pool = paged_eng.pool_stats()
+    rows.append({
+        "name": "serve/paged",
+        "us_per_call": pr["wall_us"] / max(pr["steps"], 1),
+        "derived": (f"tok_s={pr['tok_s']:.1f};util={pr['util']:.2f};"
+                    f"pool_peak_kb={pool['bytes_peak']/1e3:.1f};"
+                    f"dense_kb={pool['dense_equiv_bytes']/1e3:.1f};"
+                    f"pages_peak={pool['pages_peak']}/"
+                    f"{pool['num_pages']};"
+                    f"cow={paged_eng.stats.cow_copies}"),
+    })
+
+    on, off = _run_prefix(cfg, sparams)
+    saved = off.stats.prefill_tokens - on.stats.prefill_tokens
+    st = on.stats
+    rows.append({
+        "name": "serve/paged_prefix", "us_per_call": 0.0,
+        "derived": (f"prefill_saved={saved};hits={st.prefix_hits};"
+                    f"reused={st.prompt_tokens_reused};"
+                    f"prefill_on={st.prefill_tokens};"
+                    f"prefill_off={off.stats.prefill_tokens}"),
+    })
+
+    metrics_path = os.environ.get("TENET_POOL_METRICS")
+    if metrics_path:
+        with open(metrics_path, "w") as f:
+            json.dump({
+                "poisson": {**pool, "cow_copies": paged_eng.stats.cow_copies,
+                            "prefix_hits": paged_eng.stats.prefix_hits},
+                "shared_prefix": {
+                    **on.pool_stats(),
+                    "prefill_tokens_sharing_on": st.prefill_tokens,
+                    "prefill_tokens_sharing_off": off.stats.prefill_tokens,
+                    "prompt_tokens_reused": st.prompt_tokens_reused,
+                    "prefix_hits": st.prefix_hits,
+                    "prefix_evictions": st.prefix_evictions,
+                },
+            }, f, indent=2)
     return rows

@@ -17,7 +17,7 @@ import numpy as np
 from repro.configs.base import DasConfig, LpsaConfig, ModelConfig, TernaryConfig
 from repro.models import model as MD
 from repro.models.transformer import Runtime
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine
 
 CFG_100M = ModelConfig(
     name="sparse-bitnet-110m", family="dense",
@@ -49,8 +49,9 @@ def make_trace(cfg, gen: int, seed: int = 1):
 
 
 def run_policy(cfg, sparams, rt, trace, policy, *, slots, max_len):
-    eng = ServeEngine(cfg, sparams, rt, max_slots=slots, max_len=max_len,
-                      policy=policy)
+    eng = ServeEngine(cfg, sparams, rt,
+                      config=ServeConfig(max_slots=slots, max_len=max_len,
+                                         policy=policy))
     return eng, eng.timed_replay(trace)
 
 

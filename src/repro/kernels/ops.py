@@ -27,6 +27,7 @@ once), with counters surfaced in ``ServeEngine`` stats.
 
 from __future__ import annotations
 
+import enum
 import warnings
 from collections import Counter
 from functools import partial
@@ -44,14 +45,61 @@ from .ternary_gemm import twd_decode as _twd_decode_pallas
 from .topk_mask import topk_mask as _topk_mask_pallas
 
 __all__ = [
-    "KERNEL_MODES", "backend_kind", "pallas_compiled_ok", "use_pallas",
+    "KernelMode", "KERNEL_MODES",
+    "backend_kind", "pallas_compiled_ok", "use_pallas",
     "kernel_wanted", "attn_kernel_wanted", "packed_gemm_ok", "fused_das_ok",
     "note_fallback", "fallback_counts", "reset_fallbacks",
     "twd_decode", "ternary_gemm", "das_gemv", "das_ternary_gemm",
     "topk_mask", "sparse_attention", "K_SLAB",
 ]
 
-KERNEL_MODES = ("ref", "interpret", "pallas", "compiled", "tuned", "auto")
+class KernelMode(str, enum.Enum):
+    """Typed kernel-mode selector replacing the stringly-typed mode kwarg.
+
+    A ``str`` subclass, so every existing ``mode == "ref"`` /
+    ``mode in ("pallas", ...)`` comparison keeps working on members.  Code
+    that stores or hashes modes should normalise through
+    ``KernelMode.parse(x).value`` (enum members hash by name, not by the
+    mixed-in string value, so a raw member is a poor dict key next to
+    plain strings).
+    """
+    REF = "ref"
+    INTERPRET = "interpret"
+    PALLAS = "pallas"
+    COMPILED = "compiled"
+    TUNED = "tuned"
+    AUTO = "auto"
+
+    def __str__(self) -> str:           # str(KernelMode.REF) == "ref" on 3.10+
+        return self.value
+
+    @classmethod
+    def parse(cls, value) -> "KernelMode":
+        """Accept a member, canonical name, or alias; reject anything else
+        with a ValueError that lists the valid modes."""
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            v = _KERNEL_MODE_ALIASES.get(value.strip().lower(),
+                                         value.strip().lower())
+            try:
+                return cls(v)
+            except ValueError:
+                pass
+        raise ValueError(
+            f"unknown kernel mode {value!r}: valid modes are "
+            f"{', '.join(m.value for m in cls)} (aliases: "
+            f"{', '.join(f'{a}->{b}' for a, b in sorted(_KERNEL_MODE_ALIASES.items()))})")
+
+
+_KERNEL_MODE_ALIASES = {
+    "reference": "ref", "jnp": "ref", "xla": "ref",
+    "interp": "interpret", "emulate": "interpret", "emulated": "interpret",
+    "mosaic": "pallas",
+    "autotune": "tuned", "autotuned": "tuned",
+}
+
+KERNEL_MODES = tuple(m.value for m in KernelMode)
 
 
 def backend_kind() -> str:

@@ -20,9 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced as reduced_cfg
+from repro.kernels.ops import KernelMode
 from repro.models import model as MD
 from repro.models.transformer import Runtime
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine
 
 __all__ = ["make_prefill_step", "make_decode_step", "build_engine", "main"]
 
@@ -39,18 +40,20 @@ def make_decode_step(cfg, rt: Runtime):
     return decode_step
 
 
-def build_engine(cfg, rt: Runtime, *, max_slots: int, max_len: int,
-                 top_k: int = 0, seed: int = 0,
-                 policy: str = "continuous") -> ServeEngine:
-    """Init params, export TWD serving weights, wrap them in a ServeEngine."""
+def build_engine(cfg, rt: Runtime, config: ServeConfig | None = None,
+                 **legacy) -> ServeEngine:
+    """Init params, export TWD serving weights, wrap them in a ServeEngine.
+
+    Pass ``config=ServeConfig(...)``; loose kwargs (max_slots, max_len, ...)
+    are forwarded through the engine's deprecated back-compat shim."""
+    seed = config.seed if config is not None else legacy.get("seed", 0)
     params = MD.init_params(jax.random.PRNGKey(seed), cfg)
     sparams = MD.export_serving(params, cfg)
     nbytes = sum(x.nbytes for x in jax.tree.leaves(sparams))
     mbytes = sum(x.nbytes for x in jax.tree.leaves(params))
     print(f"[serve] {cfg.name}: serving weights {nbytes/1e6:.1f} MB "
           f"(master {mbytes/1e6:.1f} MB, {mbytes/max(nbytes,1):.1f}x TWD+quant)")
-    return ServeEngine(cfg, sparams, rt, max_slots=max_slots, max_len=max_len,
-                       top_k=top_k, seed=seed, policy=policy)
+    return ServeEngine(cfg, sparams, rt, config=config, **legacy)
 
 
 def _make_prompt(cfg, rng, length: int):
@@ -76,9 +79,20 @@ def main(argv=None):
                     default="continuous")
     ap.add_argument("--no-sparse", action="store_true",
                     help="full attention + full KV cache (naive baseline)")
+    ap.add_argument("--layout", choices=["auto", "paged"], default="auto",
+                    help="KV layout: 'auto' keeps per-slot caches; 'paged' "
+                         "shares one refcounted page arena per full-attn "
+                         "layer with lazy allocation + radix prefix sharing")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="pool capacity incl. the null page; 0 auto-sizes "
+                         "to the per-slot worst case")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the radix-trie prompt-prefix index "
+                         "(paged layout)")
     ap.add_argument("--kernel-mode", default="ref",
-                    choices=["ref", "interpret", "pallas", "compiled",
-                             "tuned", "auto"],
+                    type=lambda s: KernelMode.parse(s).value,
                     help="ternary-linear execution path (kernels/ops."
                          "KERNEL_MODES); kernel modes route slab-aligned "
                          "packed+DAS layers through the fused "
@@ -94,9 +108,15 @@ def main(argv=None):
     rt = Runtime(serve_sparse=not args.no_sparse,
                  kernel_mode=args.kernel_mode)
     max_len = args.prompt_len + args.gen
+    if args.layout == "paged" and max_len % args.page_size:
+        max_len += args.page_size - max_len % args.page_size
 
-    eng = build_engine(cfg, rt, max_slots=args.slots, max_len=max_len,
-                       top_k=args.top_k, seed=args.seed, policy=args.policy)
+    sc = ServeConfig(max_slots=args.slots, max_len=max_len,
+                     layout=args.layout, page_size=args.page_size,
+                     num_pages=args.num_pages,
+                     prefix_sharing=not args.no_prefix_sharing,
+                     top_k=args.top_k, seed=args.seed, policy=args.policy)
+    eng = build_engine(cfg, rt, config=sc)
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -111,6 +131,20 @@ def main(argv=None):
           f"{st.slot_utilization:.2f}, {st.generated_tokens} tokens in "
           f"{st.wall_seconds:.2f}s "
           f"({st.generated_tokens/max(st.wall_seconds,1e-9):.1f} tok/s)")
+    if args.layout == "paged":
+        pool = eng.pool_stats()
+        if pool["num_pages"]:
+            print(f"[serve] paged pool: {pool['pages_peak']}/"
+                  f"{pool['num_pages']} pages peak "
+                  f"({pool['bytes_peak']/1e6:.2f} MB vs dense "
+                  f"{pool['dense_equiv_bytes']/1e6:.2f} MB), "
+                  f"{st.prefix_hits} prefix hits "
+                  f"({st.prompt_tokens_reused} tokens reused), "
+                  f"{st.cow_copies} CoW copies")
+        else:
+            print("[serve] paged pool: no full-attention layers under this "
+                  "config (LPSA/ring only) -> no page arenas; pass "
+                  "--no-sparse to page the global layers")
     for uid in sorted(results):
         r = results[uid]
         print(f"[serve] req {uid}: ttft {r.ttft_steps} steps, latency "

@@ -175,12 +175,18 @@ def _stream_proj(p, cfg, kernel_mode, pack):
 
 def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
                 t: jax.Array, kind: str, *, serve_sparse: bool = True,
-                kernel_mode: str = "ref"):
+                kernel_mode: str = "ref",
+                page_table: jax.Array | None = None):
     """One-token decode.  x: (B, 1, D); cache from models.kvcache.
 
     t: scalar (lock-step: all sequences at the same position) or (B,)
     per-sequence positions (continuous batching: each slot at its own
-    decode depth).  Returns (y (B,1,D), new_cache).
+    decode depth).  Paged caches (kvcache.CacheSpec layout="paged") take
+    ``page_table`` (B, pages_per_seq) int32 mapping each sequence's logical
+    pages to arena pages; the gathered view is laid out exactly like a full
+    cache, so the attention math below is layout-oblivious.  For paged
+    caches rows with t < 0 are inactive (their write is routed to the null
+    page and masked).  Returns (y (B,1,D), new_cache).
     """
     from repro.models import kvcache  # local import to avoid cycle
 
@@ -195,8 +201,8 @@ def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, cache: dict,
     q, k = rp(q, pos), rp(k, pos)
     ring = sink < FULL_SINK
     cache = kvcache.attn_write(cache, k, v, t, sink=sink, window=window,
-                               ring=ring)
-    k_all, v_all, k_pos = kvcache.attn_read(cache)       # k_pos (B, S)
+                               ring=ring, page_table=page_table)
+    k_all, v_all, k_pos = kvcache.attn_read(cache, page_table)  # k_pos (B, S)
     o = _decode_attention(cfg, q, k_all, v_all, pos, k_pos, sink=sink,
                           window=window, kernel_mode=kernel_mode)
     o = o.reshape(b, 1, cfg.q_dim)

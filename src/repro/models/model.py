@@ -98,8 +98,14 @@ def prefill(p: dict, cfg: ModelConfig, batch_in: jax.Array,
 
 
 def init_caches(p_or_none, cfg: ModelConfig, batch: int, max_len: int,
-                rt: Runtime = Runtime(), dtype=jnp.bfloat16) -> dict:
-    """Decode caches without a prefill pass (dry-run entry point)."""
+                rt: Runtime = Runtime(), dtype=jnp.bfloat16, *,
+                page_size: int = 0, num_pages: int = 0) -> dict:
+    """Decode caches without a prefill pass (dry-run entry point).
+
+    ``page_size > 0`` allocates would-be full attention caches as one shared
+    paged arena per layer (kvcache.CacheSpec layout="paged"); decode_step
+    then needs a ``page_table``.  Other layouts are unaffected.
+    """
     kinds = cfg.layer_kinds()
     plen = len(cfg.layer_pattern)
     n_groups, tail = (divmod(cfg.n_layers, plen) if cfg.scan_layers
@@ -108,26 +114,29 @@ def init_caches(p_or_none, cfg: ModelConfig, batch: int, max_len: int,
     if n_groups:
         per_pos = []
         for j, kind in enumerate(cfg.layer_pattern):
-            one = T.init_layer_cache(cfg, kind, batch, max_len, rt, dtype)
+            one = T.init_layer_cache(cfg, kind, batch, max_len, rt, dtype,
+                                     page_size=page_size, num_pages=num_pages)
             per_pos.append(jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (n_groups,) + a.shape), one))
         stacked = tuple(per_pos)
     tail_caches = tuple(
         T.init_layer_cache(cfg, kinds[n_groups * plen + i], batch, max_len,
-                           rt, dtype)
+                           rt, dtype, page_size=page_size,
+                           num_pages=num_pages)
         for i in range(tail))
     return {"stacked": stacked, "tail": tail_caches}
 
 
 def decode_step(p: dict, cfg: ModelConfig, caches: dict, token_or_embed,
-                t, rt: Runtime = Runtime()):
+                t, rt: Runtime = Runtime(), page_table=None):
     """One decode step.  t: scalar position (lock-step batch) or (B,)
-    per-sequence positions (continuous batching).  -> (logits (B, V),
-    new caches)."""
+    per-sequence positions (continuous batching); for paged caches inactive
+    rows pass t = -1 and ``page_table`` (B, pages_per_seq) int32 addresses
+    the shared arenas.  -> (logits (B, V), new caches)."""
     if token_or_embed.ndim == 1:
         token_or_embed = token_or_embed[:, None]
     x = _inputs_to_x(p, cfg, token_or_embed)
-    x, caches = T.stack_decode(p["layers"], cfg, x, caches, t, rt)
+    x, caches = T.stack_decode(p["layers"], cfg, x, caches, t, rt, page_table)
     return _logits(p, cfg, x)[:, 0], caches
 
 

@@ -189,7 +189,12 @@ def tlin_apply(p: dict, x: jax.Array, tc: TernaryConfig, *,
     ``ca`` optionally supplies a precomputed `CompactActivation` of `x`
     (from `tlin_compact`) so sibling projections of one input don't repeat
     the per-block top-k; it is consulted only on the fused packed path.
+
+    ``kernel_mode`` accepts anything ``ops.KernelMode.parse`` does (members,
+    canonical names, aliases); unknown modes raise ValueError here, at the
+    API edge, instead of silently selecting the reference path downstream.
     """
+    kernel_mode = ops.KernelMode.parse(kernel_mode).value
     if not tc.enabled:
         w = p["w"] if "w" in p else p["w_hp"]
         return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))

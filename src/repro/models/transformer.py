@@ -33,7 +33,8 @@ from repro.models import rwkv6 as R
 from repro.models.ternary_linear import tlin_apply, tlin_compact, tlin_init
 
 __all__ = ["Runtime", "stack_init", "stack_train", "stack_prefill",
-           "stack_decode", "init_layer_cache", "ffn_init", "ffn_apply"]
+           "stack_decode", "layer_cache_spec", "init_layer_cache",
+           "ffn_init", "ffn_apply"]
 
 
 @dataclass(frozen=True)
@@ -207,7 +208,8 @@ def block_prefill(bp: dict, cfg: ModelConfig, x: jax.Array, kind: str,
                                softcap=cfg.attn_softcap)
             y = tlin_apply(ap["wo"], o.reshape(x.shape[0], x.shape[1], -1),
                            cfg.ternary, kernel_mode=km)
-            full = KV.init_attn_full(cfg, batch, max_len, dt)
+            full = KV.init_cache(cfg, KV.CacheSpec("full", batch,
+                                                   max_len=max_len, dtype=dt))
             kpad = full["k"].at[:, :k.shape[1]].set(k.astype(dt))
             vpad = full["v"].at[:, :v.shape[1]].set(v.astype(dt))
             ppad = full["pos"].at[:, :k.shape[1]].set(pos.astype(jnp.int32))
@@ -231,14 +233,18 @@ def block_prefill(bp: dict, cfg: ModelConfig, x: jax.Array, kind: str,
 
 
 def block_decode(bp: dict, cfg: ModelConfig, x: jax.Array, kind: str,
-                 cache, t, shared, rt: Runtime):
+                 cache, t, shared, rt: Runtime,
+                 page_table: jax.Array | None = None):
     """One-token decode; t is scalar (lock-step) or (B,) per-sequence
-    positions (continuous batching) — recurrent mixers are position-free."""
+    positions (continuous batching) — recurrent mixers are position-free.
+    ``page_table`` addresses paged attention caches (ignored by every other
+    layout)."""
     km = rt.kernel_mode
     if kind in ("attn", "local"):
         y, cache = A.attn_decode(_attn_params(bp, shared), cfg,
                                  L.rmsnorm(bp["norm1"], x), cache, t, kind,
-                                 serve_sparse=rt.serve_sparse, kernel_mode=km)
+                                 serve_sparse=rt.serve_sparse, kernel_mode=km,
+                                 page_table=page_table)
         x = x + y
         x = x + _mixer_ffn(bp, cfg, L.rmsnorm(bp["norm2"], x), rt)
         return x, cache
@@ -270,20 +276,33 @@ def block_decode(bp: dict, cfg: ModelConfig, x: jax.Array, kind: str,
 # cache init (decode entry point without a prefill pass)
 # --------------------------------------------------------------------------
 
-def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
-                     rt: Runtime, dtype=jnp.bfloat16):
+def layer_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     rt: Runtime, dtype=jnp.bfloat16, *, page_size: int = 0,
+                     num_pages: int = 0) -> KV.CacheSpec:
+    """Resolve a layer kind to its serving CacheSpec.  ``page_size > 0``
+    turns would-be full caches into views over a shared paged arena
+    (ring/recurrent layouts are already O(1) per slot and stay per-slot)."""
     if kind in ("attn", "local"):
         sink, window = A.kind_sink_window(cfg, kind, rt.serve_sparse)
         if sink < A.FULL_SINK:
-            return KV.init_attn_ring(cfg, batch, sink, window, dtype)
-        return KV.init_attn_full(cfg, batch, max_len, dtype)
-    if kind == "mamba":
-        return KV.init_mamba_state(cfg, batch)
-    if kind == "rwkv":
-        return KV.init_rwkv_state(cfg, batch)
-    if kind == "gla":
-        return KV.init_gla_state(cfg, batch)
+            return KV.CacheSpec("ring", batch, sink=sink, window=window,
+                                dtype=dtype)
+        if page_size > 0:
+            return KV.CacheSpec("paged", batch, max_len=max_len,
+                                page_size=page_size, num_pages=num_pages,
+                                dtype=dtype)
+        return KV.CacheSpec("full", batch, max_len=max_len, dtype=dtype)
+    if kind in ("mamba", "rwkv", "gla"):
+        return KV.CacheSpec(kind, batch)
     raise ValueError(kind)
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     rt: Runtime, dtype=jnp.bfloat16, *, page_size: int = 0,
+                     num_pages: int = 0):
+    return KV.init_cache(cfg, layer_cache_spec(
+        cfg, kind, batch, max_len, rt, dtype, page_size=page_size,
+        num_pages=num_pages))
 
 
 # --------------------------------------------------------------------------
@@ -339,7 +358,7 @@ def stack_prefill(params: dict, cfg: ModelConfig, x: jax.Array, rt: Runtime,
 
 
 def stack_decode(params: dict, cfg: ModelConfig, x: jax.Array, caches: dict,
-                 t, rt: Runtime):
+                 t, rt: Runtime, page_table: jax.Array | None = None):
     pat = cfg.layer_pattern
     shared = params["shared"]
 
@@ -349,7 +368,11 @@ def stack_decode(params: dict, cfg: ModelConfig, x: jax.Array, caches: dict,
             gp, gc = xs
             ncs = []
             for j, kind in enumerate(pat):
-                x, nc = block_decode(gp[j], cfg, x, kind, gc[j], t, shared, rt)
+                # page_table is closure-captured: one shared (B, pages) table
+                # is loop-invariant across scan groups (each group's paged
+                # arena is a distinct leaf of gc)
+                x, nc = block_decode(gp[j], cfg, x, kind, gc[j], t, shared,
+                                     rt, page_table)
                 ncs.append(nc)
             return x, tuple(ncs)
         x, new_stacked = jax.lax.scan(group, x,
@@ -358,6 +381,7 @@ def stack_decode(params: dict, cfg: ModelConfig, x: jax.Array, caches: dict,
     start = cfg.n_layers - len(params["tail"])
     for i, bp in enumerate(params["tail"]):
         kind = cfg.layer_kinds()[start + i]
-        x, nc = block_decode(bp, cfg, x, kind, caches["tail"][i], t, shared, rt)
+        x, nc = block_decode(bp, cfg, x, kind, caches["tail"][i], t, shared,
+                             rt, page_table)
         new_tail.append(nc)
     return x, {"stacked": new_stacked, "tail": tuple(new_tail)}

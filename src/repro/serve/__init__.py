@@ -9,11 +9,16 @@ carry per-sequence positions (models/kvcache.py).
 Modules:
   scheduler — Request + arrival/priority queue (FifoScheduler)
   sampler   — greedy / temperature / top-k next-token sampling
+  config    — ServeConfig: the validated engine configuration object
+  kvpool    — PagePool / RadixIndex: refcounted paged-KV bookkeeping
   engine    — ServeEngine: slot state machine + the jitted decode step
 """
+from repro.serve.config import ServeConfig
 from repro.serve.engine import EngineStats, RequestResult, ServeEngine
+from repro.serve.kvpool import PagePool, PrefixEntry, RadixIndex
 from repro.serve.sampler import make_sampler, sample_token
 from repro.serve.scheduler import FifoScheduler, Request
 
-__all__ = ["ServeEngine", "EngineStats", "RequestResult",
-           "FifoScheduler", "Request", "make_sampler", "sample_token"]
+__all__ = ["ServeEngine", "ServeConfig", "EngineStats", "RequestResult",
+           "FifoScheduler", "Request", "make_sampler", "sample_token",
+           "PagePool", "PrefixEntry", "RadixIndex"]

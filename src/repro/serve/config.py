@@ -1,0 +1,99 @@
+"""ServeConfig: the validated engine configuration object.
+
+Consolidates the kwarg pile ``ServeEngine.__init__`` accreted over PR 1-6
+(``max_slots``, ``max_len``, ``top_k``, ``seed``, ``policy``, plus the new
+paged-pool knobs) into one frozen dataclass with validated defaults.  The
+engine still accepts the loose kwargs through a thin back-compat shim that
+emits a DeprecationWarning and folds them into a ServeConfig.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.kernels.ops import KernelMode
+
+__all__ = ["ServeConfig"]
+
+_POLICIES = ("continuous", "wave")
+_LAYOUTS = ("auto", "paged")
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Engine configuration.
+
+    layout "auto" keeps the per-slot caches resolved from the model config
+    (ring for LPSA/local layers, dense full otherwise); "paged" allocates
+    would-be full caches as one shared refcounted page arena per layer with
+    per-sequence page tables (kvcache.CacheSpec layout="paged").
+
+    ``num_pages`` 0 auto-sizes the pool to the per-slot worst case
+    (max_slots * max_len / page_size + null page) — same capacity as the
+    dense layout, but allocated lazily and shared across prompts, so *used*
+    memory tracks live tokens.  ``prefix_sharing`` enables the radix-trie
+    prompt-prefix index (paged layout only).
+
+    ``kernel_mode`` None inherits the Runtime's mode; anything else is
+    normalised through kernels.ops.KernelMode.parse and overrides it.
+    """
+    max_slots: int = 4
+    max_len: int = 512
+    layout: str = "auto"
+    page_size: int = 16
+    num_pages: int = 0
+    prefix_sharing: bool = True
+    top_k: int = 0
+    seed: int = 0
+    policy: str = "continuous"
+    kernel_mode: str | None = None
+
+    def __post_init__(self):
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.policy not in _POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}: valid "
+                             f"policies are {', '.join(_POLICIES)}")
+        if self.layout not in _LAYOUTS:
+            raise ValueError(f"unknown layout {self.layout!r}: valid "
+                             f"layouts are {', '.join(_LAYOUTS)}")
+        if self.layout == "paged":
+            if self.page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got "
+                                 f"{self.page_size}")
+            if self.max_len % self.page_size:
+                raise ValueError(
+                    f"max_len ({self.max_len}) must be a multiple of "
+                    f"page_size ({self.page_size}) so logical pages tile "
+                    f"the sequence exactly")
+            if self.num_pages and self.num_pages < 2:
+                raise ValueError("num_pages must be 0 (auto) or >= 2 "
+                                 "(page 0 is the reserved null page)")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.kernel_mode is not None:
+            # normalise via the enum (aliases accepted, unknowns raise)
+            object.__setattr__(self, "kernel_mode",
+                               KernelMode.parse(self.kernel_mode).value)
+
+    @property
+    def pages_per_seq(self) -> int:
+        return self.max_len // self.page_size if self.layout == "paged" else 0
+
+    def resolved_num_pages(self) -> int:
+        """Pool capacity incl. the null page (auto-sizing when num_pages=0)."""
+        if self.layout != "paged":
+            return 0
+        if self.num_pages:
+            return self.num_pages
+        return self.max_slots * self.pages_per_seq + 1
+
+    def with_updates(self, **kw) -> "ServeConfig":
+        unknown = set(kw) - {f.name for f in dataclasses.fields(self)}
+        if unknown:
+            raise TypeError(f"unknown ServeConfig field(s): "
+                            f"{', '.join(sorted(unknown))}")
+        return dataclasses.replace(self, **kw)

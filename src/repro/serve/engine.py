@@ -26,11 +26,24 @@ tests/test_serve_engine.py for the batch-invariance check.
 ``policy="wave"`` degrades the same machinery to lock-step gang
 scheduling (admit only when ALL slots are free, barrier until all
 finish): the baseline the benchmarks compare against.
+
+``ServeConfig(layout="paged")`` swaps the dense per-slot full caches for a
+block-paged KV pool (kvcache.CacheSpec layout="paged"): one refcounted
+page arena per full-attention layer, per-slot int32 page tables passed to
+the SAME jitted decode step (shapes stay static — the table is data, not
+structure), pages allocated lazily as slots cross page boundaries, and a
+radix-trie prefix index (serve.kvpool.RadixIndex) that lets admission
+reuse the pages + states of the longest cached pack-aligned prompt
+prefix instead of re-prefilling it.  Shared pages are copy-on-write: the
+first divergent write to a page with refcount > 1 copies it; retiring a
+slot releases its references and scrubs pages that drop free.  Used pool
+memory therefore tracks live tokens, not ``max_slots * max_len``.
 """
 
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field, replace
 
 import jax
@@ -40,12 +53,15 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
 from repro.models import attention as A
+from repro.models import kvcache as KV
 from repro.models import model as MD
 from repro.models.transformer import Runtime
+from repro.serve.config import ServeConfig
+from repro.serve.kvpool import PagePool, PrefixEntry, RadixIndex
 from repro.serve.sampler import make_sampler, sample_token
 from repro.serve.scheduler import FifoScheduler, Request
 
-__all__ = ["ServeEngine", "EngineStats", "RequestResult"]
+__all__ = ["ServeEngine", "ServeConfig", "EngineStats", "RequestResult"]
 
 FREE, PREFILL, DECODE = 0, 1, 2
 
@@ -84,6 +100,12 @@ class EngineStats:
     kernel_fallbacks: dict = field(default_factory=dict)
                                   # "op(shape)" -> count of silent jnp-ref
                                   # fallbacks observed (kernels/ops counters)
+    # paged-pool accounting (zero under the per-slot layout)
+    prefix_hits: int = 0          # admissions that reused a cached prefix
+    prompt_tokens_reused: int = 0  # prompt tokens absorbed via prefix reuse
+    cow_copies: int = 0           # copy-on-write page copies
+    prefix_evictions: int = 0     # trie entries evicted to free pages
+    pool_peak_pages: int = 0      # peak pages in use during this run
 
     @property
     def slot_utilization(self) -> float:
@@ -95,11 +117,13 @@ class EngineStats:
 class _Slot:
     __slots__ = ("state", "req", "input_tok", "input_x", "input_pos",
                  "tail", "tail_idx", "out", "admit_vtime", "first_tok_vtime",
-                 "admitted_with_active")
+                 "admitted_with_active", "pages", "page_budget")
 
     def __init__(self):
         self.state = FREE
         self.req = None
+        self.pages = None          # paged layout: logical->physical page ids
+        self.page_budget = 0       # pages this slot may still allocate
 
 
 class ServeEngine:
@@ -124,17 +148,34 @@ class ServeEngine:
     changing backends — jit traces bake the config chosen at trace time.
     """
 
+    _LEGACY_KWARGS = ("max_slots", "max_len", "top_k", "seed", "policy",
+                      "kernel_mode", "layout", "page_size", "num_pages",
+                      "prefix_sharing")
+
     def __init__(self, cfg: ModelConfig, sparams: dict,
-                 rt: Runtime = Runtime(), *, max_slots: int = 4,
-                 max_len: int = 512, top_k: int = 0, seed: int = 0,
-                 policy: str = "continuous", kernel_mode: str | None = None):
-        if policy not in ("continuous", "wave"):
-            raise ValueError(f"unknown admission policy {policy!r}")
-        if kernel_mode is not None:
-            rt = replace(rt, kernel_mode=kernel_mode)
+                 rt: Runtime = Runtime(), config: ServeConfig | None = None,
+                 **legacy):
+        if legacy:
+            unknown = set(legacy) - set(self._LEGACY_KWARGS)
+            if unknown:
+                raise TypeError(f"unknown ServeEngine kwarg(s): "
+                                f"{', '.join(sorted(unknown))}")
+            warnings.warn(
+                "loose ServeEngine kwargs are deprecated; pass "
+                "config=ServeConfig(...) (repro.serve.config)",
+                DeprecationWarning, stacklevel=2)
+            config = (config or ServeConfig()).with_updates(**legacy)
+        config = config or ServeConfig()
+        if config.kernel_mode is not None:
+            rt = replace(rt, kernel_mode=config.kernel_mode)
+        else:
+            rt = replace(rt,
+                         kernel_mode=ops.KernelMode.parse(rt.kernel_mode).value)
         self.cfg, self.sparams, self.rt = cfg, sparams, rt
+        self.config = config
+        max_slots, max_len = config.max_slots, config.max_len
         self.max_slots, self.max_len = max_slots, max_len
-        self.policy = policy
+        self.policy = config.policy
         self.scheduler = FifoScheduler()
         self.stats = EngineStats(max_slots=max_slots)
         self.vtime = 0
@@ -150,16 +191,37 @@ class ServeEngine:
         self._chunk = (cfg.lpsa.chunk if cfg.lpsa else 256) \
             if self._has_stream else 1
 
+        # ---- paged pool (layout="paged") --------------------------------
+        self._paged = config.layout == "paged"
+        self._share = self._paged and config.prefix_sharing \
+            and not self._uses_embeds   # embeds have no token ids to key on
+        self._page_size = config.page_size
+        # only full-attention layers become arenas; a paged engine over a
+        # pure ring/recurrent config still shares exact prefix *states*
+        # through the trie, just with zero pages per entry
+        self._pages_per_seq = config.pages_per_seq if self._has_full else 0
+        page_size = self._page_size if self._pages_per_seq else 0
+        num_pages = config.resolved_num_pages() if self._pages_per_seq else 0
+        self._pool = PagePool(num_pages, self._page_size) \
+            if self._pages_per_seq else None
+        self._radix = RadixIndex() if self._share else None
+        self._pt = np.zeros((max_slots, max(self._pages_per_seq, 1)),
+                            np.int32) if self._paged else None
+
         self.caches = MD.init_caches(None, cfg, max_slots, max_len, rt,
-                                     self._cache_dtype)
+                                     self._cache_dtype, page_size=page_size,
+                                     num_pages=num_pages)
         self._empty1 = MD.init_caches(None, cfg, 1, max_len, rt,
                                       self._cache_dtype)
+        self._paged_stacked, self._paged_tail = self._find_paged_layers()
+        self._rest_is_empty = self._paged and not self._has_non_paged_rows()
+        self._page_bytes = self._compute_page_bytes()
         self._slots = [_Slot() for _ in range(max_slots)]
         self._results: dict[int, RequestResult] = {}
         self._pending_uids: set[int] = set()
-        self._base_key = jax.random.PRNGKey(seed)
-        self._sampler = make_sampler(top_k)
-        self._top_k = top_k
+        self._base_key = jax.random.PRNGKey(config.seed)
+        self._sampler = make_sampler(config.top_k)
+        self._top_k = config.top_k
 
         if rt.kernel_mode == "tuned":
             self._autotune_warmup()   # eager: must precede any jit trace
@@ -168,9 +230,42 @@ class ServeEngine:
             lambda sp, x: MD.prefill(sp, cfg, x, rt, max_len=max_len))
         self._step = jax.jit(self._step_fn, donate_argnums=(1,))
         self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+        self._insert_paged = jax.jit(self._insert_paged_fn,
+                                     donate_argnums=(0,))
+        self._insert_shared = jax.jit(self._insert_shared_fn,
+                                      donate_argnums=(0,))
+        self._copy_page = jax.jit(self._copy_page_fn, donate_argnums=(0,))
+        self._scrub = jax.jit(self._scrub_fn, donate_argnums=(0,))
         self._sample1 = jax.jit(
             lambda lg, uid, temp: sample_token(
-                lg, self._fold_key(uid, jnp.int32(0)), temp, top_k))
+                lg, self._fold_key(uid, jnp.int32(0)), temp, config.top_k))
+
+    # -- paged-layer structure helpers ------------------------------------
+
+    def _find_paged_layers(self):
+        """(stacked_flags, tail_flags): which layer trees are page arenas."""
+        stacked = tuple(KV.is_paged(c) for c in (self.caches["stacked"] or ()))
+        tail = tuple(KV.is_paged(c) for c in self.caches["tail"])
+        return stacked, tail
+
+    def _has_non_paged_rows(self) -> bool:
+        """True when any layer keeps per-slot (non-arena) state — ring
+        caches or recurrent states that prefix reuse must snapshot."""
+        flags = list(self._paged_stacked) + list(self._paged_tail)
+        return any(not f for f in flags)
+
+    def _compute_page_bytes(self) -> int:
+        """Device bytes per pool page, summed over every paged layer (scan
+        groups included: a stacked arena leaf is (G, P, ...))."""
+        total = 0
+        for flags, layers, ax in ((self._paged_stacked,
+                                   self.caches["stacked"] or (), 1),
+                                  (self._paged_tail, self.caches["tail"], 0)):
+            for paged, layer in zip(flags, layers):
+                if paged:
+                    total += sum(leaf.nbytes // leaf.shape[ax]
+                                 for leaf in layer.values())
+        return total
 
     def _autotune_warmup(self) -> None:
         """Tune every (op, shape) the serving steps will trace, eagerly.
@@ -213,11 +308,14 @@ class ServeEngine:
         return jax.random.fold_in(jax.random.fold_in(self._base_key, uid),
                                   counter)
 
-    def _step_fn(self, sparams, caches, tok, t, temps, uids, counters,
+    def _step_fn(self, sparams, caches, pt, tok, t, temps, uids, counters,
                  active, forced, forced_x):
         """One batched decode tick: embed -> decode_step -> sample.
 
-        tok (B,) int32 inputs; t (B,) per-sequence positions; forced/
+        tok (B,) int32 inputs; t (B,) per-sequence positions (paged layout:
+        -1 on inactive rows routes their writes to the null page); pt is the
+        (B, pages_per_seq) page table (None under per-slot layouts) — passed
+        as plain data so host-side page allocation never retraces; forced/
         forced_x override the input with raw prompt embeddings for
         stub-frontend models still absorbing their prompt tail.
         """
@@ -225,10 +323,10 @@ class ServeEngine:
             x = jnp.take(sparams["embed"], tok, axis=0).astype(jnp.float32)
             x = jnp.where(forced[:, None], forced_x, x)[:, None, :]
             logits, caches = MD.decode_step(sparams, self.cfg, caches, x, t,
-                                            self.rt)
+                                            self.rt, pt)
         else:
             logits, caches = MD.decode_step(sparams, self.cfg, caches, tok, t,
-                                            self.rt)
+                                            self.rt, pt)
         keys = jax.vmap(self._fold_key)(uids, counters)
         next_tok = self._sampler(logits, keys, temps)
         next_tok = jnp.where(active, next_tok, 0)
@@ -244,6 +342,138 @@ class ServeEngine:
             sm[0].astype(bg.dtype)), big["tail"], small["tail"])
         return {"stacked": stacked, "tail": tail}
 
+    # -- paged-layout jitted pieces ---------------------------------------
+    # All trace once per engine: layer structure (which layers are arenas)
+    # is static, page ids / slot index are data.
+
+    def _insert_paged_fn(self, big, small, slot, page_vec):
+        """Insert a fresh batch-1 prefill under the paged layout: dense full
+        caches scatter page-by-page into the arenas at ``page_vec`` (0 =
+        unmapped -> lands in the null page, whose positions stay -1 since
+        unprefilled dense rows carry pos -1); per-slot layers row-copy."""
+        ps, n = self._page_size, self._pages_per_seq
+
+        def paged(bg, sm, stacked):
+            def put(pages, dense):
+                if stacked:    # (G, P, ps, ...) <- (G, 1, n*ps, ...)
+                    rows = dense[:, 0].reshape(
+                        (dense.shape[0], n, ps) + dense.shape[3:])
+                    return pages.at[:, page_vec].set(rows.astype(pages.dtype))
+                rows = dense[0].reshape((n, ps) + dense.shape[2:])
+                return pages.at[page_vec].set(rows.astype(pages.dtype))
+            return {"k_pages": put(bg["k_pages"], sm["k"]),
+                    "v_pages": put(bg["v_pages"], sm["v"]),
+                    "pos_pages": put(bg["pos_pages"], sm["pos"])}
+
+        def rows(bg, sm, stacked):
+            if stacked:
+                return jax.tree.map(lambda b_, s_: b_.at[:, slot].set(
+                    s_[:, 0].astype(b_.dtype)), bg, sm)
+            return jax.tree.map(lambda b_, s_: b_.at[slot].set(
+                s_[0].astype(b_.dtype)), bg, sm)
+
+        stacked = None
+        if big["stacked"] is not None:
+            stacked = tuple(
+                paged(bg, sm, True) if is_p else rows(bg, sm, True)
+                for is_p, bg, sm in zip(self._paged_stacked, big["stacked"],
+                                        small["stacked"]))
+        tail = tuple(
+            paged(bg, sm, False) if is_p else rows(bg, sm, False)
+            for is_p, bg, sm in zip(self._paged_tail, big["tail"],
+                                    small["tail"]))
+        return {"stacked": stacked, "tail": tail}
+
+    def _insert_shared_fn(self, big, rest, slot):
+        """Restore a prefix entry's snapshot of the NON-paged layers into
+        one slot's rows (arenas untouched: shared pages arrive via the page
+        table).  ``rest`` mirrors the cache structure with paged layers
+        replaced by empty tuples (_snapshot_rest)."""
+        def one(bg, sm, stacked):
+            if KV.is_paged(bg):
+                return bg
+            if stacked:
+                return jax.tree.map(lambda b_, s_: b_.at[:, slot].set(
+                    s_[:, 0].astype(b_.dtype)), bg, sm)
+            return jax.tree.map(lambda b_, s_: b_.at[slot].set(
+                s_[0].astype(b_.dtype)), bg, sm)
+
+        stacked = None
+        if big["stacked"] is not None:
+            stacked = tuple(one(bg, sm, True) for bg, sm in
+                            zip(big["stacked"], rest["stacked"]))
+        tail = tuple(one(bg, sm, False) for bg, sm in
+                     zip(big["tail"], rest["tail"]))
+        return {"stacked": stacked, "tail": tail}
+
+    def _snapshot_rest(self, small):
+        """Host (numpy) snapshot of the non-paged layers of a batch-1 cache
+        pytree, with paged layers as empty tuples; None when every layer is
+        paged (nothing beyond pages to restore)."""
+        if self._rest_is_empty:
+            return None
+
+        def one(is_p, sm):
+            return () if is_p else jax.tree.map(np.asarray,
+                                                jax.device_get(sm))
+        stacked = None
+        if small["stacked"] is not None:
+            stacked = tuple(one(is_p, sm) for is_p, sm in
+                            zip(self._paged_stacked, small["stacked"]))
+        tail = tuple(one(is_p, sm) for is_p, sm in
+                     zip(self._paged_tail, small["tail"]))
+        return {"stacked": stacked, "tail": tail}
+
+    def _copy_page_fn(self, caches, src, dst):
+        """Copy-on-write: duplicate arena page ``src`` into ``dst`` in every
+        paged layer."""
+        def one(is_p, layer, stacked):
+            if not is_p:
+                return layer
+            if stacked:
+                return {k: v.at[:, dst].set(v[:, src])
+                        for k, v in layer.items()}
+            return {k: v.at[dst].set(v[src]) for k, v in layer.items()}
+
+        stacked = None
+        if caches["stacked"] is not None:
+            stacked = tuple(one(is_p, c, True) for is_p, c in
+                            zip(self._paged_stacked, caches["stacked"]))
+        tail = tuple(one(is_p, c, False) for is_p, c in
+                     zip(self._paged_tail, caches["tail"]))
+        return {"stacked": stacked, "tail": tail}
+
+    def _scrub_fn(self, caches, ids):
+        """Reset pos_pages to -1 for the (fixed-length, 0-padded) page-id
+        vector ``ids`` — freed pages must be masked before reuse (the null
+        page 0 is always -1, so padding is harmless)."""
+        def one(is_p, layer, stacked):
+            if not is_p:
+                return layer
+            pp = layer["pos_pages"]
+            pp = pp.at[:, ids].set(-1) if stacked else pp.at[ids].set(-1)
+            return {**layer, "pos_pages": pp}
+
+        stacked = None
+        if caches["stacked"] is not None:
+            stacked = tuple(one(is_p, c, True) for is_p, c in
+                            zip(self._paged_stacked, caches["stacked"]))
+        tail = tuple(one(is_p, c, False) for is_p, c in
+                     zip(self._paged_tail, caches["tail"]))
+        return {"stacked": stacked, "tail": tail}
+
+    def _scrub_pages(self, freed: list) -> None:
+        """Host wrapper: scrub freed pages in fixed-size batches so the
+        jitted scrub never retraces."""
+        if not freed or not self._pages_per_seq:
+            return
+        w = self._pages_per_seq
+        for i in range(0, len(freed), w):
+            ids = np.zeros(w, np.int32)
+            chunk = freed[i:i + w]
+            ids[:len(chunk)] = chunk
+            self.caches = self._scrub(self.caches, jnp.asarray(ids))
+
     # -- public API -------------------------------------------------------
 
     def submit(self, req: Request) -> None:
@@ -256,6 +486,14 @@ class ServeEngine:
                 f"request {req.uid}: prompt {req.prompt_len} + gen "
                 f"{req.max_new_tokens} exceeds max_len {self.max_len} "
                 f"(a full-cache layer is active)")
+        if self._pages_per_seq:
+            worst = -(-(req.prompt_len + req.max_new_tokens)
+                      // self._page_size)
+            usable = self._pool.num_pages - 1
+            if worst > usable:
+                raise ValueError(
+                    f"request {req.uid}: needs up to {worst} KV pages but "
+                    f"the pool holds {usable} (raise num_pages or page_size)")
         # duplicate uids among in-flight work would collide in the results
         # dict AND share a sampling-key stream (correlated draws)
         in_flight = {s.req.uid for s in self._slots if s.req is not None}
@@ -325,9 +563,18 @@ class ServeEngine:
             req = self.scheduler.pop_ready(self.vtime)
             if req is None:
                 return
-            self._admit(i, req)
+            if not self._admit(i, req):
+                # pool too tight right now: requeue and retry next tick
+                # (active slots retiring / evictions will free pages; with
+                # zero active slots every non-slot page is evictable, so
+                # the submit-time capacity check guarantees progress)
+                self._pending_uids.add(req.uid)
+                self.scheduler.add(req)
+                return
 
-    def _admit(self, idx: int, req: Request) -> None:
+    def _admit(self, idx: int, req: Request) -> bool:
+        """Claim slot ``idx`` for ``req``; False defers admission (paged
+        layout only: the pool cannot cover the request's worst case yet)."""
         slot = self._slots[idx]
         p = req.prompt_len
         prefix = (p // self._chunk) * self._chunk
@@ -341,6 +588,17 @@ class ServeEngine:
         slot.admit_vtime = self.vtime
         slot.out = []
         slot.input_x = None
+        if self._paged:
+            ok = self._admit_paged(idx, slot, req, prefix)
+            if not ok:
+                slot.req = None     # back off: slot stays FREE
+            return ok
+        self._admit_dense(idx, slot, req, prefix)
+        return True
+
+    def _admit_dense(self, idx: int, slot: _Slot, req: Request,
+                     prefix: int) -> None:
+        p = req.prompt_len
         if prefix > 0:
             logits, small = self._prefill(self.sparams,
                                           jnp.asarray(req.prompt)[None, :prefix])
@@ -348,9 +606,17 @@ class ServeEngine:
         else:
             logits, small = None, self._empty1
         self.caches = self._insert(self.caches, small, jnp.int32(idx))
-        if prefix == p:
-            # prompt fully absorbed: first token comes from prefill logits
-            tok = int(self._sample1(logits[0], jnp.int32(req.uid),
+        self._start_slot(idx, slot, req, prefix,
+                         logits[0] if logits is not None else None)
+
+    def _start_slot(self, idx: int, slot: _Slot, req: Request,
+                    absorbed: int, logits) -> None:
+        """Common tail of admission: first token from prefill/stored logits
+        when the whole prompt is absorbed, else token-by-token tail feed
+        from position ``absorbed``."""
+        p = req.prompt_len
+        if absorbed == p:
+            tok = int(self._sample1(jnp.asarray(logits), jnp.int32(req.uid),
                                     jnp.float32(req.temperature)))
             slot.state = DECODE
             slot.first_tok_vtime = self.vtime
@@ -362,21 +628,204 @@ class ServeEngine:
                 self._retire(idx)
         else:
             slot.state = PREFILL
-            slot.tail = req.prompt[prefix:]
+            slot.tail = req.prompt[absorbed:]
             slot.tail_idx = 1
-            slot.input_pos = prefix
+            slot.input_pos = absorbed
             if self._uses_embeds:
                 slot.input_tok = 0
                 slot.input_x = np.asarray(slot.tail[0], np.float32)
             else:
                 slot.input_tok = int(slot.tail[0])
 
+    # -- paged admission ---------------------------------------------------
+
+    def _admit_paged(self, idx: int, slot: _Slot, req: Request,
+                     prefix: int) -> bool:
+        p, g, ps = req.prompt_len, req.max_new_tokens, self._page_size
+        n_seq = self._pages_per_seq
+        tokens = None
+        if self._share and not self._uses_embeds:
+            tokens = tuple(int(t) for t in np.asarray(req.prompt))
+
+        # -- choose the best cached prefix --------------------------------
+        # exact entry: pages + per-slot states + logits, bitwise-identical
+        # to a fresh prefill of that prefix.  page-donor: whole pages inside
+        # the longest common prefix with any stored prompt — reusable alone
+        # only when every layer is paged (no ring/recurrent state to miss).
+        shared_len, kind, entry = 0, None, None
+        if tokens is not None:
+            best, donor, common = self._radix.lookup(tokens)
+            if best is not None and best.length >= 1:
+                shared_len, kind, entry = best.length, "exact", best
+            if self._rest_is_empty and donor is not None and n_seq:
+                l_pages = (min(common, p - 1) // ps) * ps  # keep >=1 to feed
+                if l_pages > shared_len:
+                    shared_len, kind, entry = l_pages, "pages", donor
+
+        total = -(-(p + g) // ps) if n_seq else 0
+        register = self._share and tokens is not None and prefix > 0
+        while True:
+            if kind == "exact":
+                n_cov = -(-shared_len // ps) if n_seq else 0
+                shared_pages = tuple(entry.pages[:n_cov])
+                # +1: a partial boundary page pinned by the trie gets CoW'd
+                # on this slot's first write into it
+                budget = (total - n_cov + (1 if shared_len % ps else 0)) \
+                    if n_seq else 0
+                immediate = 0
+            elif kind == "pages":
+                n_cov = shared_len // ps
+                shared_pages = tuple(entry.pages[:n_cov])
+                budget = total - n_cov
+                immediate = 0
+            else:
+                n_cov, shared_pages = 0, ()
+                immediate = -(-prefix // ps) if n_seq else 0
+                budget = total + (1 if n_seq and register and prefix % ps
+                                  else 0)
+            if not n_seq or self._paged_room(budget, shared_pages):
+                break
+            # headroom short for this plan: degrade before deferring --
+            # shared reuse -> fresh w/ registration -> fresh w/o -> defer.
+            # The bare fresh plan needs exactly ``total`` pages, which the
+            # submit-time capacity check bounds, so with zero active slots
+            # (everything evictable) admission always eventually succeeds.
+            if kind is not None:
+                kind, entry, shared_len = None, None, 0
+            elif register and prefix % ps:
+                register = False
+            else:
+                return False
+
+        # -- populate the slot's page table -------------------------------
+        pages = [0] * max(n_seq, 1)
+        if kind is not None:
+            if shared_pages:
+                self._pool.retain(shared_pages)
+            pages[:len(shared_pages)] = [int(x) for x in shared_pages]
+            entry.last_used = self.vtime
+            entry.hits += 1
+            self.stats.prefix_hits += 1
+            self.stats.prompt_tokens_reused += shared_len
+            if kind == "exact" and entry.state is not None:
+                self.caches = self._insert_shared(self.caches, entry.state,
+                                                  jnp.int32(idx))
+            logits = entry.logits if (kind == "exact" and shared_len == p) \
+                else None
+            absorbed = shared_len
+        else:
+            if prefix > 0:
+                lg, small = self._prefill(
+                    self.sparams, jnp.asarray(req.prompt)[None, :prefix])
+                self.stats.prefill_tokens += prefix
+            else:
+                lg, small = None, self._empty1
+            fresh = [self._alloc_page() for _ in range(immediate)]
+            pages[:len(fresh)] = fresh
+            page_vec = np.zeros(max(n_seq, 1), np.int32)
+            page_vec[:len(fresh)] = fresh
+            self.caches = self._insert_paged(self.caches, small,
+                                            jnp.int32(idx),
+                                            jnp.asarray(page_vec))
+            if register:
+                ent = PrefixEntry(length=prefix, pages=tuple(fresh),
+                                  state=self._snapshot_rest(small),
+                                  logits=np.asarray(lg[0]),
+                                  last_used=self.vtime)
+                if self._radix.insert(tokens[:prefix], ent) and fresh:
+                    self._pool.retain(fresh)
+            logits = lg[0] if (lg is not None and prefix == p) else None
+            absorbed = prefix
+            budget -= immediate
+
+        slot.pages = pages
+        slot.page_budget = budget
+        self._pt[idx, :] = pages
+        if self._pool is not None:
+            self.stats.pool_peak_pages = max(self.stats.pool_peak_pages,
+                                             self._pool.pages_in_use)
+        self._start_slot(idx, slot, req, absorbed, logits)
+        return True
+
+    def _paged_room(self, need_new: int, reserve_exclude=()) -> bool:
+        """Best-effort admission control: can the pool cover ``need_new``
+        future allocations on top of every active slot's outstanding budget?
+        Free pages plus trie-only (evictable) pages count; pages the request
+        is about to retain are excluded.  Conservative against generation
+        worst cases but not a hard guarantee — an exhausted pool raises at
+        allocation time."""
+        free = self._pool.free_count
+        hold: dict[int, int] = {}
+        for _, e in self._radix.items() if self._radix is not None else ():
+            for pg in e.pages:
+                hold[pg] = hold.get(pg, 0) + 1
+        excl = {int(x) for x in reserve_exclude}
+        evictable = sum(1 for pg, c in hold.items()
+                        if pg not in excl and self._pool.refs[pg] == c)
+        outstanding = sum(s.page_budget for s in self._slots
+                          if s.state != FREE)
+        return need_new + outstanding <= free + evictable
+
+    def _alloc_page(self) -> int:
+        pg = self._pool.alloc()
+        while pg is None:
+            if not self._evict_one():
+                raise RuntimeError(
+                    "kv page pool exhausted: every page is pinned by an "
+                    "active slot (raise num_pages)")
+            pg = self._pool.alloc()
+        return pg
+
+    def _evict_one(self) -> bool:
+        """Drop the least-recently-used prefix entry, freeing its pages
+        (those not also held by active slots)."""
+        if self._radix is None or not len(self._radix):
+            return False
+        lru_toks, lru_used = None, None
+        for toks, e in self._radix.items():
+            if lru_used is None or e.last_used < lru_used:
+                lru_toks, lru_used = toks, e.last_used
+        entry = self._radix.remove(lru_toks)
+        self._scrub_pages(self._pool.release(entry.pages))
+        self.stats.prefix_evictions += 1
+        return True
+
+    def _ensure_writable_pages(self) -> None:
+        """Pre-tick page-fault pass: every active slot's write position this
+        tick must map a page this slot owns exclusively.  Null mapping ->
+        lazy alloc; shared mapping (refcount > 1) -> copy-on-write."""
+        ps = self._page_size
+        for i, s in enumerate(self._slots):
+            if s.state == FREE:
+                continue
+            pi = s.input_pos // ps
+            phys = s.pages[pi]
+            if phys == 0:
+                new = self._alloc_page()
+                s.pages[pi] = new
+                self._pt[i, pi] = new
+                s.page_budget = max(s.page_budget - 1, 0)
+            elif self._pool.refs[phys] > 1:
+                new = self._alloc_page()
+                self.caches = self._copy_page(self.caches, jnp.int32(phys),
+                                              jnp.int32(new))
+                self._pool.release([phys])   # others still hold it: no free
+                s.pages[pi] = new
+                self._pt[i, pi] = new
+                s.page_budget = max(s.page_budget - 1, 0)
+                self.stats.cow_copies += 1
+        self.stats.pool_peak_pages = max(self.stats.pool_peak_pages,
+                                         self._pool.pages_in_use)
+
     # -- the decode tick --------------------------------------------------
 
     def step_decode(self) -> None:
         b = self.max_slots
         tok = np.zeros((b,), np.int32)
-        t = np.zeros((b,), np.int32)
+        # paged: inactive rows carry t = -1 so their writes land on the null
+        # page with pos -1 (keeping it permanently masked); dense layouts
+        # keep the historical t = 0 don't-care
+        t = np.full((b,), -1 if self._paged else 0, np.int32)
         temps = np.zeros((b,), np.float32)
         uids = np.zeros((b,), np.int32)
         counters = np.zeros((b,), np.int32)
@@ -397,8 +846,12 @@ class ServeEngine:
                 forced[i] = True
                 forced_x[i] = s.input_x
 
+        if self._paged and self._pages_per_seq:
+            self._ensure_writable_pages()
+
+        pt = jnp.asarray(self._pt) if self._paged else None
         next_tok, self.caches = self._step(
-            self.sparams, self.caches, jnp.asarray(tok), jnp.asarray(t),
+            self.sparams, self.caches, pt, jnp.asarray(tok), jnp.asarray(t),
             jnp.asarray(temps), jnp.asarray(uids), jnp.asarray(counters),
             jnp.asarray(active), jnp.asarray(forced), jnp.asarray(forced_x))
         next_tok = np.asarray(next_tok)
@@ -448,7 +901,42 @@ class ServeEngine:
             admit_vtime=s.admit_vtime, first_token_vtime=s.first_tok_vtime,
             finish_vtime=self.vtime,
             admitted_with_active=s.admitted_with_active)
+        if self._paged and s.pages is not None:
+            held = [pg for pg in s.pages if pg]
+            if held:
+                self._scrub_pages(self._pool.release(held))
+            self._pt[idx, :] = 0
+            s.pages = None
+            s.page_budget = 0
         s.state = FREE
         s.req = None
         s.input_x = None
         s.tail = None
+
+    # -- pool introspection ------------------------------------------------
+
+    def pool_stats(self) -> dict:
+        """Paged-pool occupancy snapshot (zeros for dense layouts).
+
+        ``page_bytes`` is the per-page footprint summed across every paged
+        layer arena; ``dense_equiv_bytes`` is what the same layers would pin
+        under the per-slot full layout (max_slots x max_len rows)."""
+        if not self._paged or self._pool is None:
+            return {"layout": "dense", "page_size": 0, "num_pages": 0,
+                    "pages_in_use": 0, "pages_peak": 0, "page_bytes": 0,
+                    "bytes_in_use": 0, "bytes_peak": 0,
+                    "dense_equiv_bytes": 0, "prefix_entries": 0}
+        peak = max(self.stats.pool_peak_pages, self._pool.pages_in_use)
+        return {
+            "layout": "paged",
+            "page_size": self._page_size,
+            "num_pages": self._pool.num_pages,
+            "pages_in_use": self._pool.pages_in_use,
+            "pages_peak": peak,
+            "page_bytes": self._page_bytes,
+            "bytes_in_use": self._pool.pages_in_use * self._page_bytes,
+            "bytes_peak": peak * self._page_bytes,
+            "dense_equiv_bytes": (self.max_slots * self._pages_per_seq
+                                  * self._page_bytes),
+            "prefix_entries": len(self._radix) if self._radix else 0,
+        }

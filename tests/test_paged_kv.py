@@ -1,0 +1,304 @@
+"""Block-paged KV pool: cache factory, radix trie, and engine semantics.
+
+(a) CacheSpec/init_cache factory (incl. the deprecated init_attn_* shims);
+(b) paged attn_write/attn_read against the dense full layout at the cache
+    layer;
+(c) kvpool unit behaviour: PagePool refcounts and RadixIndex lookup;
+(d) engine integration: bitwise token parity paged-vs-per-slot on a
+    staggered trace with a duplicate prompt (exact prefix hit on the way);
+(e) prefix sharing prefills strictly fewer prompt tokens;
+(f) refcount/copy-on-write correctness under interleaved retire+admit;
+(g) used pool memory tracks live tokens, not max_slots * max_len.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DasConfig, LpsaConfig, ModelConfig, TernaryConfig
+from repro.models import kvcache as KV
+from repro.models import model as MD
+from repro.models.transformer import Runtime
+from repro.serve import Request, ServeConfig, ServeEngine
+from repro.serve.kvpool import PagePool, PrefixEntry, RadixIndex
+
+# two layer mixes: attn-only (every layer becomes a page arena -> page-donor
+# sharing legal) and attn+local (ring layers ride along per-slot -> only
+# exact snapshot reuse).  serve_sparse=False keeps "attn" layers full-cache.
+CFG_FULL = ModelConfig(
+    name="tiny-paged", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+    ternary=TernaryConfig(das=DasConfig(16, 8)),
+    dtype="float32", remat=False, scan_layers=False,
+)
+CFG_MIXED = ModelConfig(
+    name="tiny-paged-mixed", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+    layer_pattern=("attn", "local"), window=12,
+    ternary=TernaryConfig(das=DasConfig(16, 8)),
+    lpsa=LpsaConfig(sink=4, window=12, chunk=8),
+    dtype="float32", remat=False, scan_layers=False,
+)
+RT = Runtime(serve_sparse=False)
+MAX_LEN = 48
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def sparams_full():
+    params = MD.init_params(jax.random.PRNGKey(0), CFG_FULL)
+    return MD.export_serving(params, CFG_FULL)
+
+
+@pytest.fixture(scope="module")
+def sparams_mixed():
+    params = MD.init_params(jax.random.PRNGKey(0), CFG_MIXED)
+    return MD.export_serving(params, CFG_MIXED)
+
+
+# -------------------------------------------------------------------------
+# (a) the cache factory
+# -------------------------------------------------------------------------
+
+def test_cache_spec_factory_layouts():
+    cfg = CFG_FULL
+    full = KV.init_cache(cfg, KV.CacheSpec("full", batch=2, max_len=16))
+    assert full["k"].shape == (2, 16, cfg.n_kv_heads, cfg.head_dim_)
+    assert np.all(np.asarray(full["pos"]) == -1)
+
+    ring = KV.init_cache(cfg, KV.CacheSpec("ring", batch=2, sink=4, window=8))
+    assert ring["k"].shape == (2, 12, cfg.n_kv_heads, cfg.head_dim_)
+
+    paged = KV.init_cache(cfg, KV.CacheSpec("paged", batch=2, page_size=4,
+                                            num_pages=7))
+    assert paged["k_pages"].shape == (7, 4, cfg.n_kv_heads, cfg.head_dim_)
+    assert np.all(np.asarray(paged["pos_pages"]) == -1)
+    assert KV.is_paged(paged) and not KV.is_paged(full)
+
+
+def test_cache_spec_validation():
+    with pytest.raises(ValueError, match="layout"):
+        KV.CacheSpec("banana", batch=1)
+    with pytest.raises(ValueError):
+        KV.CacheSpec("paged", batch=1, page_size=0, num_pages=4)
+    with pytest.raises(ValueError):
+        KV.CacheSpec("paged", batch=1, page_size=4, num_pages=1)
+
+
+def test_deprecated_init_shims_warn_and_match():
+    with pytest.warns(DeprecationWarning):
+        old = KV.init_attn_full(CFG_FULL, 2, 16, jnp.float32)
+    new = KV.init_cache(CFG_FULL, KV.CacheSpec("full", batch=2, max_len=16,
+                                               dtype=jnp.float32))
+    for name in ("k", "v", "pos"):
+        np.testing.assert_array_equal(np.asarray(old[name]),
+                                      np.asarray(new[name]))
+
+
+# -------------------------------------------------------------------------
+# (b) paged write/read == dense full write/read
+# -------------------------------------------------------------------------
+
+def test_paged_write_read_matches_full(rng):
+    cfg, B, L, ps = CFG_FULL, 3, 16, 4
+    n = L // ps
+    full = KV.init_cache(cfg, KV.CacheSpec("full", batch=B, max_len=L,
+                                           dtype=jnp.float32))
+    paged = KV.init_cache(cfg, KV.CacheSpec("paged", batch=B, page_size=ps,
+                                            num_pages=B * n + 1,
+                                            dtype=jnp.float32))
+    # slot b owns pages [1 + b*n, 1 + (b+1)*n)
+    pt = jnp.asarray(1 + np.arange(B * n, dtype=np.int32).reshape(B, n))
+    for t in range(10):
+        k = jnp.asarray(rng.standard_normal((B, 1, cfg.n_kv_heads,
+                                             cfg.head_dim_)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, 1, cfg.n_kv_heads,
+                                             cfg.head_dim_)), jnp.float32)
+        ts = jnp.full((B,), t)
+        full = KV.attn_write(full, k, v, ts, sink=0, window=0, ring=False)
+        paged = KV.attn_write(paged, k, v, ts, sink=0, window=0, ring=False,
+                              page_table=pt)
+    fk, fv, fpos = KV.attn_read(full)
+    pk, pv, ppos = KV.attn_read(paged, pt)
+    np.testing.assert_array_equal(np.asarray(fk), np.asarray(pk))
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(pv))
+    np.testing.assert_array_equal(np.asarray(fpos), np.asarray(ppos))
+    # inactive rows (t = -1) route to the null page, which stays masked
+    paged = KV.attn_write(paged, k, v, jnp.full((B,), -1), sink=0, window=0,
+                          ring=False, page_table=pt)
+    assert np.all(np.asarray(paged["pos_pages"][0]) == -1)
+
+
+# -------------------------------------------------------------------------
+# (c) kvpool units
+# -------------------------------------------------------------------------
+
+def test_page_pool_refcounts():
+    pool = PagePool(num_pages=4, page_size=8)
+    a, b, c = pool.alloc(), pool.alloc(), pool.alloc()
+    assert sorted((a, b, c)) == [1, 2, 3] and pool.alloc() is None
+    pool.retain([b])
+    assert pool.release([b]) == []          # still held once
+    assert pool.release([b]) == [b]         # now free
+    assert pool.release([a, c]) == [a, c]
+    assert pool.pages_in_use == 0
+    with pytest.raises(RuntimeError):
+        pool.release([a])                   # double free
+    with pytest.raises(RuntimeError):
+        pool.retain([a])                    # retain of free page
+
+
+def test_radix_lookup_exact_and_donor():
+    idx = RadixIndex()
+    e1 = PrefixEntry(length=4, pages=(1, 2))
+    e2 = PrefixEntry(length=6, pages=(1, 2, 3))
+    assert idx.insert((5, 6, 7, 8), e1)
+    assert not idx.insert((5, 6, 7, 8), e1)          # duplicate
+    assert idx.insert((5, 6, 7, 8, 9, 10), e2)
+    best, donor, common = idx.lookup((5, 6, 7, 8, 9, 10, 11))
+    assert best is e2 and common == 6
+    # diverges after 5 tokens: deepest registered ancestor is e1, but the
+    # common prefix with e2's sequence is longer and e2 can donate pages
+    best, donor, common = idx.lookup((5, 6, 7, 8, 9, 99))
+    assert best is e1 and donor is e2 and common == 5
+    best, donor, common = idx.lookup((42,))
+    assert best is None and common == 0
+    assert idx.remove((5, 6, 7, 8)) is e1
+    best, _, _ = idx.lookup((5, 6, 7, 8, 9, 99))
+    assert best is None                               # e1 gone
+    assert len(idx) == 1
+
+
+# -------------------------------------------------------------------------
+# (d)-(g) engine integration
+# -------------------------------------------------------------------------
+
+def _trace(prompts, gen=10, stagger=3, temp=0.8):
+    return [Request(uid=i, prompt=p, max_new_tokens=gen, temperature=temp,
+                    arrival=stagger * i) for i, p in enumerate(prompts)]
+
+
+def _prompts(seed=0, lens=(11, 17, 9, 11)):
+    rng = np.random.default_rng(seed)
+    ps = [np.asarray(rng.integers(0, 256, (int(l),)), np.int32) for l in lens]
+    ps[3] = ps[0].copy()           # duplicate prompt -> exact prefix hit
+    return ps
+
+
+@pytest.mark.parametrize("which", ["full", "mixed"])
+def test_paged_engine_token_parity(which, sparams_full, sparams_mixed):
+    cfg, sp = ((CFG_FULL, sparams_full) if which == "full"
+               else (CFG_MIXED, sparams_mixed))
+    dense = ServeEngine(cfg, sp, RT,
+                        config=ServeConfig(max_slots=2, max_len=MAX_LEN))
+    paged = ServeEngine(cfg, sp, RT,
+                        config=ServeConfig(max_slots=2, max_len=MAX_LEN,
+                                           layout="paged", page_size=PAGE))
+    for r in _trace(_prompts()):
+        dense.submit(r)
+    for r in _trace(_prompts()):
+        paged.submit(r)
+    rd, rp = dense.run(), paged.run()
+    assert set(rd) == set(rp)
+    for uid in rd:
+        np.testing.assert_array_equal(rd[uid].tokens, rp[uid].tokens)
+    assert paged.stats.prefix_hits >= 1          # the duplicate prompt
+
+
+def test_prefix_sharing_prefills_fewer_tokens(sparams_full):
+    mk = lambda share: ServeEngine(
+        CFG_FULL, sparams_full, RT,
+        config=ServeConfig(max_slots=2, max_len=MAX_LEN, layout="paged",
+                           page_size=PAGE, prefix_sharing=share))
+    rng = np.random.default_rng(1)
+    stem = rng.integers(0, 256, (24,))
+    prompts = [np.asarray(np.concatenate([stem, rng.integers(0, 256, (4,))]),
+                          np.int32) for _ in range(4)]
+    on, off = mk(True), mk(False)
+    for r in _trace(prompts, stagger=6):
+        on.submit(r)
+    for r in _trace(prompts, stagger=6):
+        off.submit(r)
+    ron, roff = on.run(), off.run()
+    assert on.stats.prefill_tokens < off.stats.prefill_tokens
+    assert on.stats.prompt_tokens_reused > 0
+    # sharing is an optimization, not a sampler change: greedy outputs at
+    # temperature 0 would match; here just check both produced full results
+    assert set(ron) == set(roff)
+
+
+def test_cow_and_refcounts_interleaved(sparams_full):
+    eng = ServeEngine(CFG_FULL, sparams_full, RT,
+                      config=ServeConfig(max_slots=2, max_len=MAX_LEN,
+                                         layout="paged", page_size=PAGE))
+    rng = np.random.default_rng(2)
+    stem = rng.integers(0, 256, (12,))   # not page-aligned: boundary CoW
+    mk = lambda uid, arrive: Request(
+        uid=uid,
+        prompt=np.asarray(np.concatenate([stem,
+                                          rng.integers(0, 256, (3,))]),
+                          np.int32),
+        max_new_tokens=8, temperature=0.5, arrival=arrive)
+    # wave 1 registers the prefix; wave 2 arrives after wave 1 retires and
+    # must CoW the trie-held partial boundary page
+    for i in range(2):
+        eng.submit(mk(i, 0))
+    for i in range(2, 4):
+        eng.submit(mk(i, 40))
+    res = eng.run()
+    assert len(res) == 4
+    assert eng.stats.cow_copies >= 1
+    pool = eng._pool
+    # drained: only trie entries hold pages now, each exactly once per holder
+    held = {pg for _, e in eng._radix.items() for pg in e.pages}
+    assert {int(p) for p in np.nonzero(pool.refs)[0]} == held
+    trie_holds = {}
+    for _, e in eng._radix.items():
+        for pg in e.pages:
+            trie_holds[pg] = trie_holds.get(pg, 0) + 1
+    for pg, c in trie_holds.items():
+        assert pool.refs[pg] == c
+
+
+def test_pool_memory_tracks_live_tokens(sparams_full):
+    eng = ServeEngine(CFG_FULL, sparams_full, RT,
+                      config=ServeConfig(max_slots=4, max_len=MAX_LEN,
+                                         layout="paged", page_size=PAGE,
+                                         prefix_sharing=False))
+    rng = np.random.default_rng(3)
+    prompts = [np.asarray(rng.integers(0, 256, (9,)), np.int32)
+               for _ in range(4)]
+    for r in _trace(prompts, gen=6, stagger=0):
+        eng.submit(r)
+    eng.run()
+    pool = eng.pool_stats()
+    # live tokens never exceeded 4 * (9 + 6) = 60 -> at most
+    # 4 * ceil(15/8) = 8 pages, far below the 4 * 48/8 = 24 dense pages
+    live_worst = 4 * (-(-(9 + 6) // PAGE))
+    assert 0 < pool["pages_peak"] <= live_worst
+    assert pool["pages_peak"] * pool["page_bytes"] < pool["dense_equiv_bytes"]
+    assert pool["pages_in_use"] == 0     # drained, nothing pinned
+    # dense equivalent would pin max_slots * max_len rows regardless
+    assert pool["dense_equiv_bytes"] == 4 * (MAX_LEN // PAGE) \
+        * pool["page_bytes"]
+
+
+def test_paged_pool_exhaustion_defers_not_crashes(sparams_full):
+    # pool sized for ~1.5 sequences: admissions must defer, not die, and
+    # every request still completes
+    eng = ServeEngine(CFG_FULL, sparams_full, RT,
+                      config=ServeConfig(max_slots=2, max_len=MAX_LEN,
+                                         layout="paged", page_size=PAGE,
+                                         num_pages=4))
+    rng = np.random.default_rng(4)
+    prompts = [np.asarray(rng.integers(0, 256, (10,)), np.int32)
+               for _ in range(3)]
+    for r in _trace(prompts, gen=8, stagger=0):
+        eng.submit(r)
+    res = eng.run()
+    assert len(res) == 3
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(Request(uid=99,
+                           prompt=np.asarray(rng.integers(0, 256, (30,)),
+                                             np.int32),
+                           max_new_tokens=10, temperature=0.0, arrival=0))
