@@ -30,7 +30,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import tiny_lm
+from benchmarks.common import tiny_hybrid, tiny_lm
 from repro.models import model as MD
 from repro.models.transformer import Runtime
 from repro.serve import Request, ServeConfig, ServeEngine
@@ -132,6 +132,30 @@ def _run_prefix(cfg, sparams):
     return on, off
 
 
+def _run_recurrent():
+    """Continuous batching over a mamba/attn hybrid: per-slot recurrent
+    state (ssm carry + chunk-replay buffers) rides next to the LPSA ring
+    in one slot-state pytree.  Sanity: the same trace through the wave
+    (gang-scheduled) engine must yield bitwise-identical tokens — a
+    request's stream cannot depend on how it was batched."""
+    cfg = tiny_hybrid("serve-bench-hybrid", d_model=128, n_layers=4)
+    params = MD.init_params(__import__("jax").random.PRNGKey(0), cfg)
+    sparams = MD.export_serving(params, cfg)
+    rt = Runtime()
+    max_len = 48 + 20
+    cont = ServeEngine(cfg, sparams, rt,
+                       config=ServeConfig(max_slots=SLOTS, max_len=max_len))
+    got = cont.timed_replay(poisson_trace(cfg))
+    wave = ServeEngine(cfg, sparams, rt,
+                       config=ServeConfig(max_slots=SLOTS, max_len=max_len,
+                                          policy="wave"))
+    ref = wave.timed_replay(poisson_trace(cfg))
+    for uid in ref:
+        assert np.array_equal(ref[uid].tokens, got[uid].tokens), \
+            f"hybrid tokens depend on batching for uid {uid}"
+    return _summarize(cont, got)
+
+
 def run():
     cfg = tiny_lm("serve-bench", d_model=128, n_layers=4, window=48, sink=8)
     params = MD.init_params(__import__("jax").random.PRNGKey(0), cfg)
@@ -169,6 +193,15 @@ def run():
                     f"pages_peak={pool['pages_peak']}/"
                     f"{pool['num_pages']};"
                     f"cow={paged_eng.stats.cow_copies}"),
+    })
+
+    rr = _run_recurrent()
+    rows.append({
+        "name": "serve/recurrent",
+        "us_per_call": rr["wall_us"] / max(rr["steps"], 1),
+        "derived": (f"tok_s={rr['tok_s']:.1f};p50={rr['p50']:.0f};"
+                    f"p95={rr['p95']:.0f};util={rr['util']:.2f};"
+                    f"steps={rr['steps']};parity=wave_bitwise"),
     })
 
     on, off = _run_prefix(cfg, sparams)

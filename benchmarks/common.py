@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import (DasConfig, LpsaConfig, ModelConfig,
-                                TernaryConfig)
+                                SsmConfig, TernaryConfig)
 from repro.data.pipeline import SyntheticLM
 from repro.models import model as MD
 from repro.models.transformer import Runtime
@@ -37,6 +37,22 @@ def tiny_lm(name="tiny", *, ternary=True, das=True, lpsa=True,
         ternary=TernaryConfig(enabled=ternary,
                               das=DasConfig(32, 16) if das else None),
         lpsa=LpsaConfig(sink=sink, window=window, chunk=16) if lpsa else None,
+        dtype="float32", remat=False, scan_layers=False,
+    )
+
+
+def tiny_hybrid(name="tiny-hybrid", *, d_model=128, n_layers=4,
+                vocab=512, window=24, sink=8) -> ModelConfig:
+    """Mamba/attention hybrid (zamba2-style pattern) for serving benches:
+    the attn layers ride the LPSA ring, the mamba layers carry recurrent
+    ssm state + chunk-replay buffers per slot."""
+    return ModelConfig(
+        name=name, family="hybrid", n_layers=n_layers, d_model=d_model,
+        n_heads=4, n_kv_heads=2, head_dim=32, d_ff=d_model * 4, vocab=vocab,
+        layer_pattern=("mamba", "attn"),
+        ternary=TernaryConfig(das=DasConfig(32, 16)),
+        lpsa=LpsaConfig(sink=sink, window=window, chunk=16),
+        ssm=SsmConfig(16, 16, 2, 4, chunk=16),
         dtype="float32", remat=False, scan_layers=False,
     )
 

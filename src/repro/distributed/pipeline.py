@@ -81,7 +81,8 @@ def pipeline_apply(stage_fn: Callable, stage_params, x: jax.Array, *,
         return outs.reshape(x_local.shape)
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    from repro.distributed.sharding import shard_map
+    return shard_map(
         local, mesh=mesh,
         in_specs=(pspec, P()),
         out_specs=P(),

@@ -99,10 +99,19 @@ def main(argv=None):
                          "das_ternary_gemm datapath; 'tuned' autotunes "
                          "per-shape at engine construction and caches "
                          "winners on disk (see kernels/autotune.py)")
+    ap.add_argument("--moe-expert-capacity", type=int, default=0,
+                    help="bound the per-expert token load per decode tick "
+                         "by deferring admissions (MoE configs only; 0 = "
+                         "unbounded — decode itself never drops tokens)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
+    # gate bad configs here with argparse-style errors instead of letting
+    # them traceback deep inside cache/engine init
+    try:
+        cfg = get_config(args.arch)
+    except KeyError as e:
+        ap.error(str(e.args[0] if e.args else e))
     if args.reduced:
         cfg = reduced_cfg(cfg)
     rt = Runtime(serve_sparse=not args.no_sparse,
@@ -111,12 +120,25 @@ def main(argv=None):
     if args.layout == "paged" and max_len % args.page_size:
         max_len += args.page_size - max_len % args.page_size
 
-    sc = ServeConfig(max_slots=args.slots, max_len=max_len,
-                     layout=args.layout, page_size=args.page_size,
-                     num_pages=args.num_pages,
-                     prefix_sharing=not args.no_prefix_sharing,
-                     top_k=args.top_k, seed=args.seed, policy=args.policy)
-    eng = build_engine(cfg, rt, config=sc)
+    try:
+        sc = ServeConfig(max_slots=args.slots, max_len=max_len,
+                         layout=args.layout, page_size=args.page_size,
+                         num_pages=args.num_pages,
+                         prefix_sharing=not args.no_prefix_sharing,
+                         top_k=args.top_k, seed=args.seed,
+                         policy=args.policy,
+                         moe_expert_capacity=args.moe_expert_capacity)
+        eng = build_engine(cfg, rt, config=sc)
+    except ValueError as e:
+        ap.error(f"config not serveable: {e}")
+
+    # the resolved slot-state union (one entry per distinct layout, in
+    # stack order) — the README's "serving the model zoo" table, live
+    layouts: dict[str, int] = {}
+    for row in eng.layout_summary():
+        layouts[row["layout"]] = layouts.get(row["layout"], 0) + 1
+    print("[serve] slot-state layouts: "
+          + ", ".join(f"{k} x{v}" for k, v in layouts.items()))
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):

@@ -97,6 +97,7 @@ def init_cache(cfg: ModelConfig, spec: CacheSpec) -> dict:
                 "pos_pages": jnp.full((spec.num_pages, spec.page_size), -1,
                                       jnp.int32)}
     if spec.layout == "mamba":
+        from repro.models.mamba2 import init_ssd_buffers
         s: SsmConfig = cfg.ssm or SsmConfig()
         d_inner = s.expand * cfg.d_model
         n_heads = d_inner // s.head_dim
@@ -105,6 +106,10 @@ def init_cache(cfg: ModelConfig, spec: CacheSpec) -> dict:
                               jnp.float32),
             "ssm": jnp.zeros((spec.batch, n_heads, s.head_dim, s.state_dim),
                              jnp.float32),
+            # partial-chunk token buffers: decode replays the prefill chunk
+            # grid row-by-row (mamba2.mamba_decode), so the state carries the
+            # last full-chunk boundary plus the buffered remainder tokens.
+            **init_ssd_buffers(cfg, spec.batch),
         }
     if spec.layout == "rwkv":
         hd = cfg.head_dim_

@@ -10,6 +10,18 @@ matmul with decay weights exp(La_t - La_s); inter-chunk flows through the
 carried state — same scheme as linear_attn but with scalar-per-head decay
 and (B_t, C_t) playing (k, v) roles.  All projections are TENET ternary
 linears; conv is a width-4 depthwise causal conv.
+
+Decode replays the SAME chunk grid (anchored at position 0) instead of the
+naive stepwise recurrence: the state carries the last full-chunk boundary
+plus per-token buffers for the partial chunk, and each step recomputes its
+row of the chunked einsums.  Stepwise state accumulation reassociates the
+fp sums differently from the chunked prefill, and under ternary+DAS
+quantization that ~1e-7 drift compounds across steps into discrete
+rounding flips (the old zamba2 prefill/decode divergence); replaying the
+chunk keeps decode on the prefill grid, so the error floor stays at
+single-op noise with no accumulation.  Cost is O(chunk) per token — the
+same order as an LPSA window decode — and memory is O(chunk), still
+constant in context length.
 """
 
 from __future__ import annotations
@@ -76,10 +88,52 @@ def _conv_full(p, xs):
     return jax.nn.silu(out).astype(xs.dtype)
 
 
+def _ssd_chunk(s_in, xb, bb, cb, dtb, la, causal):
+    """One SSD chunk (any width c): (y (B,c,nh,hd), s_out (B,nh,hd,N))."""
+    cla = jnp.cumsum(la, axis=1)                       # (B, c, nh)
+    # pairwise decay exp(cla_t - cla_s); clamp the *difference* at 0 so
+    # masked (t < s) entries can't overflow — cla itself stays exact.
+    decay = jnp.exp(jnp.minimum(cla[:, :, None, :] - cla[:, None, :, :],
+                                0.0))                  # (B,t,s,nh)
+    scores = jnp.einsum("btn,bsn->bts", cb, bb)[:, :, :, None] * decay
+    scores = jnp.where(causal[None, :, :, None], scores, 0.0)
+    scores = scores * dtb[:, None, :, :]               # dt_s factor
+    y = jnp.einsum("btsh,bshd->bthd", scores, xb)      # intra
+    y += jnp.exp(cla)[:, :, :, None] * jnp.einsum(
+        "bhdn,btn->bthd", s_in, cb)                    # inter
+    la_end = cla[:, -1:, :]
+    # B_s weighted by remaining decay and dt_s  -> (B, c, nh, N)
+    b_state = (jnp.exp(la_end - cla) * dtb)[..., None] * bb[:, :, None, :]
+    s_out = (jnp.exp(la_end)[:, 0, :, None, None] * s_in
+             + jnp.einsum("bshd,bshn->bhdn", xb, b_state))
+    return y, s_out
+
+
+def init_ssd_buffers(cfg: ModelConfig, batch: int) -> dict:
+    """Zeroed partial-chunk token buffers for chunk-replay decode."""
+    s: SsmConfig = cfg.ssm or SsmConfig()
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    return {
+        "ssd_x": jnp.zeros((batch, s.chunk, nh, s.head_dim), jnp.float32),
+        "ssd_b": jnp.zeros((batch, s.chunk, s.state_dim), jnp.float32),
+        "ssd_c": jnp.zeros((batch, s.chunk, s.state_dim), jnp.float32),
+        "ssd_dt": jnp.zeros((batch, s.chunk, nh), jnp.float32),
+    }
+
+
 def mamba_train(p: dict, cfg: ModelConfig, x: jax.Array, *,
                 kernel_mode: str = "ref",
-                s0: jax.Array | None = None, conv0: jax.Array | None = None):
-    """Full-sequence SSD.  x: (B, L, D) -> (y (B,L,D), (S_fin, conv_tail))."""
+                s0: jax.Array | None = None, conv0: jax.Array | None = None,
+                return_state: bool = False):
+    """Full-sequence SSD.  x: (B, L, D) -> (y (B,L,D), (S_fin, conv_tail)).
+
+    With ``return_state`` the second element is instead the full decode
+    state dict: conv tail, the ssm carry at the last *full* chunk boundary
+    (position (L // chunk) * chunk), and the partial-chunk token buffers
+    holding the remainder — exactly what :func:`mamba_decode` consumes to
+    continue on the same chunk grid from position L.
+    """
     s: SsmConfig = cfg.ssm
     b, l, d = x.shape
     di, nh = mamba_dims(cfg)
@@ -95,72 +149,116 @@ def mamba_train(p: dict, cfg: ModelConfig, x: jax.Array, *,
     a = -jnp.exp(p["a_log"].astype(jnp.float32))          # (nh,)
     log_a = dt * a[None, None, :]                         # (B, L, nh) <= 0
 
-    c = min(s.chunk, l)
-    if l % c:
-        c = l
-    n = l // c
-    ch = lambda t, shp: t.reshape((b, n, c) + shp).swapaxes(0, 1)  # noqa: E731
-    xc = ch(xh, (nh, s.head_dim))
-    bc = ch(bmat, (s.state_dim,))
-    cc = ch(cmat, (s.state_dim,))
-    dtc = ch(dt, (nh,))
-    lac = ch(log_a, (nh,))
-    causal = jnp.tril(jnp.ones((c, c), bool))
-
     if s0 is None:
         s0 = jnp.zeros((b, nh, s.head_dim, s.state_dim), jnp.float32)
 
-    def step(carry, blk):
-        s_in = carry
-        xb, bb, cb, dtb, la = (t.astype(jnp.float32) for t in blk)
-        cla = jnp.cumsum(la, axis=1)                       # (B, c, nh)
-        # pairwise decay exp(cla_t - cla_s); clamp the *difference* at 0 so
-        # masked (t < s) entries can't overflow — cla itself stays exact.
-        decay = jnp.exp(jnp.minimum(cla[:, :, None, :] - cla[:, None, :, :],
-                                    0.0))                  # (B,t,s,nh)
-        scores = jnp.einsum("btn,bsn->bts", cb, bb)[:, :, :, None] * decay
-        scores = jnp.where(causal[None, :, :, None], scores, 0.0)
-        scores = scores * dtb[:, None, :, :]               # dt_s factor
-        y = jnp.einsum("btsh,bshd->bthd", scores, xb)      # intra
-        y += jnp.exp(cla)[:, :, :, None] * jnp.einsum(
-            "bhdn,btn->bthd", s_in, cb)                    # inter
-        la_end = cla[:, -1:, :]
-        # B_s weighted by remaining decay and dt_s  -> (B, c, nh, N)
-        b_state = (jnp.exp(la_end - cla) * dtb)[..., None] * bb[:, :, None, :]
-        s_out = (jnp.exp(la_end)[:, 0, :, None, None] * s_in
-                 + jnp.einsum("bshd,bshn->bhdn", xb, b_state))
-        return s_out, y
+    n_full, rem = divmod(l, s.chunk)
+    f32 = jnp.float32
+    seq = (xh.astype(f32), bmat.astype(f32), cmat.astype(f32),
+           dt.astype(f32), log_a.astype(f32))
 
-    s_fin, yc = jax.lax.scan(step, s0, (xc, bc, cc, dtc, lac))
-    y = yc.swapaxes(0, 1).reshape(b, l, nh, s.head_dim)
-    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    def run_chunks(s_in, parts, c):
+        """Scan chunks of width c over boundary-aligned ``parts``."""
+        n = parts[0].shape[1] // c
+        ch = lambda t: t.reshape((b, n, c) + t.shape[2:]).swapaxes(0, 1)  # noqa: E731
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        step = lambda carry, blk: _ssd_chunk(carry, *blk, causal)[::-1]  # noqa: E731
+        s_out, yc = jax.lax.scan(step, s_in, tuple(ch(t) for t in parts))
+        return yc.swapaxes(0, 1).reshape(b, n * c, nh, s.head_dim), s_out
+
+    if n_full == 0 or rem == 0:
+        # whole sequence on one grid: chunk width min(s.chunk, l)
+        y, s_fin = run_chunks(s0, seq, min(s.chunk, l) if l else 1)
+        s_bound = s0 if n_full == 0 else s_fin
+    else:
+        split = n_full * s.chunk
+        y_full, s_bound = run_chunks(s0, tuple(t[:, :split] for t in seq),
+                                     s.chunk)
+        y_rem, s_fin = run_chunks(s_bound, tuple(t[:, split:] for t in seq),
+                                  rem)
+        y = jnp.concatenate([y_full, y_rem], axis=1)
+
+    y = y + p["d_skip"].astype(f32)[None, None, :, None] * xh.astype(f32)
     y = y.reshape(b, l, di).astype(x.dtype)
     y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
     out = tlin_apply(p["wo"], y, cfg.ternary, kernel_mode=kernel_mode)
-    return out, (s_fin, conv_tail)
+    if not return_state:
+        return out, (s_fin, conv_tail)
+    buf = init_ssd_buffers(cfg, b)
+    if rem:   # n_full == 0 implies rem == l: the whole prefix is buffered
+        tail = slice(l - rem, l)
+        buf = {"ssd_x": buf["ssd_x"].at[:, :rem].set(seq[0][:, tail]),
+               "ssd_b": buf["ssd_b"].at[:, :rem].set(seq[1][:, tail]),
+               "ssd_c": buf["ssd_c"].at[:, :rem].set(seq[2][:, tail]),
+               "ssd_dt": buf["ssd_dt"].at[:, :rem].set(seq[3][:, tail])}
+    state = {"conv": conv_tail.astype(f32), "ssm": s_bound, **buf}
+    return out, state
 
 
-def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: dict, *,
+def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array, state: dict, t, *,
                  kernel_mode: str = "ref"):
-    """One token.  x: (B, 1, D); state {"conv": (B, cw-1, di), "ssm": ...}."""
+    """One token at position(s) t.  x: (B, 1, D); state holds the conv tail,
+    the ssm carry at the last full-chunk boundary, and partial-chunk buffers
+    (see init_cache layout "mamba").
+
+    t is a scalar or (B,) absolute position; ``slot = t % chunk`` addresses
+    the buffers, so sequences at different depths batch together.  The step
+    writes this token's (x, B, C, dt) into the buffers, recomputes its row
+    of the prefill chunk einsums (same grid, same operand values -> error
+    stays at single-op noise, never accumulating across steps), and folds
+    the buffer into the carried state with the exact chunk formula when the
+    chunk fills.
+    """
     s: SsmConfig = cfg.ssm
     b = x.shape[0]
     di, nh = mamba_dims(cfg)
+    c = s.chunk
     z, xs, bmat, cmat, dt = _proj(p, cfg, x, kernel_mode)
     conv_in = jnp.concatenate([state["conv"].astype(xs.dtype), xs], axis=1)
     w = p["conv"].astype(jnp.float32)
     xc = jax.nn.silu(jnp.einsum("bld,ld->bd", conv_in.astype(jnp.float32), w))
     new_conv = conv_in[:, 1:]
     xh = xc.reshape(b, nh, s.head_dim).astype(jnp.float32)
+
+    t = jnp.asarray(t, jnp.int32)
+    if t.ndim == 0:
+        t = jnp.broadcast_to(t, (b,))
+    slot = jnp.maximum(t, 0) % c                           # (B,)
+    bidx = jnp.arange(b)
+    xb = state["ssd_x"].at[bidx, slot].set(xh)
+    bb = state["ssd_b"].at[bidx, slot].set(bmat[:, 0].astype(jnp.float32))
+    cb = state["ssd_c"].at[bidx, slot].set(cmat[:, 0].astype(jnp.float32))
+    dtb = state["ssd_dt"].at[bidx, slot].set(dt[:, 0])
+
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
-    la = dt[:, 0] * a[None, :]                             # (B, nh)
-    ssm = state["ssm"]
-    s_new = (jnp.exp(la)[:, :, None, None] * ssm
-             + dt[:, 0][:, :, None, None] * xh[..., None]
-             * bmat[:, 0][:, None, None, :].astype(jnp.float32))
-    y = jnp.einsum("bhdn,bn->bhd", s_new, cmat[:, 0].astype(jnp.float32))
+    la = dtb * a[None, None, :]                            # (B, c, nh)
+    cla = jnp.cumsum(la, axis=1)
+    s_in = state["ssm"]
+    # row `slot` of the chunk einsums (buffer rows past slot are zero)
+    cla_p = cla[bidx, slot]                                # (B, nh)
+    decay = jnp.exp(jnp.minimum(cla_p[:, None, :] - cla, 0.0))
+    scores = jnp.einsum("bn,bsn->bs", cb[bidx, slot], bb)[:, :, None] * decay
+    scores = jnp.where((jnp.arange(c)[None, :] <= slot[:, None])[:, :, None],
+                       scores, 0.0)
+    scores = scores * dtb
+    y = jnp.einsum("bsh,bshd->bhd", scores, xb)
+    y += jnp.exp(cla_p)[:, :, None] * jnp.einsum("bhdn,bn->bhd", s_in,
+                                                 cb[bidx, slot])
+    # chunk boundary: fold the full buffer into the carried state and clear
+    la_end = cla[:, -1:, :]
+    b_state = (jnp.exp(la_end - cla) * dtb)[..., None] * bb[:, :, None, :]
+    s_folded = (jnp.exp(la_end)[:, 0, :, None, None] * s_in
+                + jnp.einsum("bshd,bshn->bhdn", xb, b_state))
+    full = slot == c - 1                                   # (B,)
+    s_new = jnp.where(full[:, None, None, None], s_folded, s_in)
+
+    def keep(buf):
+        m = full.reshape((b,) + (1,) * (buf.ndim - 1))
+        return jnp.where(m, jnp.zeros_like(buf), buf)
+
     y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
     y = y.reshape(b, 1, di).astype(x.dtype)
     y = L.rmsnorm(p["norm"], y * jax.nn.silu(z))
     out = tlin_apply(p["wo"], y, cfg.ternary, kernel_mode=kernel_mode)
-    return out, {"conv": new_conv, "ssm": s_new}
+    return out, {"conv": new_conv, "ssm": s_new, "ssd_x": keep(xb),
+                 "ssd_b": keep(bb), "ssd_c": keep(cb), "ssd_dt": keep(dtb)}

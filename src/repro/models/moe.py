@@ -25,9 +25,10 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, MoeConfig
 from repro.core import ternary as tq
 from repro.core import twd
+from repro.distributed.sharding import shard_map
 from repro.models.ternary_linear import tlin_apply, tlin_compact
 
-__all__ = ["moe_init", "moe_apply", "export_moe"]
+__all__ = ["moe_init", "moe_apply", "export_moe", "decode_capacity"]
 
 
 def moe_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
@@ -164,17 +165,37 @@ def _ep_spec(sub: dict, ep_axis: str):
     return {k: P(ep_axis) for k in sub}
 
 
+def decode_capacity(cfg: ModelConfig, batch: int) -> int:
+    """No-drop per-expert capacity for a decode tick of ``batch`` tokens.
+
+    The training-time capacity ``t * top_k / E * cf`` models a balanced
+    router over thousands of tokens; at decode t is the live batch (a
+    handful of rows), so a momentarily hot expert overflows the bound and
+    the overflow tokens are SILENTLY dropped from its mixture — making a
+    request's tokens depend on its batch-mates (batch-variant serving).
+    A single expert can receive at most one routed copy of each token, so
+    capacity == batch makes drops impossible at decode.
+    """
+    del cfg
+    return max(1, batch)
+
+
 def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array, *, mesh=None,
               dp_axes=("data",), ep_axis: str = "model",
-              kernel_mode: str = "ref") -> jax.Array:
-    """x: (B, S, D) -> (B, S, D).  EP via shard_map when a mesh is given."""
+              kernel_mode: str = "ref", capacity: int | None = None
+              ) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).  EP via shard_map when a mesh is given.
+
+    ``capacity`` overrides the per-expert token capacity (serving decode
+    passes :func:`decode_capacity` so hot experts never drop tokens; None
+    keeps the capacity-factor formula used in training)."""
     e: MoeConfig = cfg.moe
     b, s, d = x.shape
 
     if mesh is None:
         t = b * s
-        cap = max(1, min(t, int(t * e.top_k / e.n_experts
-                                * e.capacity_factor) + 1))
+        cap = capacity if capacity is not None else max(
+            1, min(t, int(t * e.top_k / e.n_experts * e.capacity_factor) + 1))
         weights = _expert_weights(p, cfg, x.dtype)
         y = _dispatch_compute(x.reshape(t, d), weights, p["router"], cfg,
                               0, e.n_experts, cap).reshape(b, s, d)
@@ -187,8 +208,9 @@ def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array, *, mesh=None,
             raise ValueError(f"{e.n_experts} experts not divisible by EP={ep}")
         e_local = e.n_experts // ep
         t_local = max(1, (b // dp)) * s
-        cap = max(1, min(t_local, int(t_local * e.top_k / e.n_experts
-                                      * e.capacity_factor) + 1))
+        cap = capacity if capacity is not None else max(
+            1, min(t_local, int(t_local * e.top_k / e.n_experts
+                                * e.capacity_factor) + 1))
 
         expert_names = ("experts_gate", "experts_in", "experts_out")
         p_experts = {k: p[k] for k in expert_names}
@@ -202,7 +224,7 @@ def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array, *, mesh=None,
                                   ei * e_local, e_local, cap)
             return jax.lax.psum(y, ep_axis).reshape(x_blk.shape)
 
-        y = jax.shard_map(
+        y = shard_map(
             local_fn, mesh=mesh,
             in_specs=(P(dp_axes, None, None), specs, P()),
             out_specs=P(dp_axes, None, None),

@@ -77,12 +77,17 @@ def ffn_apply(p: dict, cfg: ModelConfig, x: jax.Array, *, kernel_mode="ref"):
     return tlin_apply(p["w_out"], h, tc, kernel_mode=kernel_mode)
 
 
-def _mixer_ffn(p: dict, cfg: ModelConfig, x: jax.Array, rt: Runtime):
-    """The FFN/MoE half of an attention/gla block."""
+def _mixer_ffn(p: dict, cfg: ModelConfig, x: jax.Array, rt: Runtime,
+               decode: bool = False):
+    """The FFN/MoE half of an attention/gla block.  ``decode`` switches MoE
+    to the no-drop capacity (a hot expert must never drop a live request's
+    token mid-decode; see moe.decode_capacity)."""
     if cfg.moe is not None:
+        cap = (MOE.decode_capacity(cfg, x.shape[0] * x.shape[1])
+               if decode else None)
         return MOE.moe_apply(p["moe"], cfg, x, mesh=rt.mesh,
                              dp_axes=rt.dp_axes, ep_axis=rt.ep_axis,
-                             kernel_mode=rt.kernel_mode)
+                             kernel_mode=rt.kernel_mode, capacity=cap)
     return ffn_apply(p["ffn"], cfg, x, kernel_mode=rt.kernel_mode)
 
 
@@ -218,9 +223,10 @@ def block_prefill(bp: dict, cfg: ModelConfig, x: jax.Array, kind: str,
         x = x + _mixer_ffn(bp, cfg, L.rmsnorm(bp["norm2"], x), rt)
         return x, cache
     if kind == "mamba":
-        y, (s_fin, conv_tail) = M.mamba_train(
-            bp["mamba"], cfg, L.rmsnorm(bp["norm1"], x), kernel_mode=km)
-        return x + y, {"conv": conv_tail.astype(jnp.float32), "ssm": s_fin}
+        y, state = M.mamba_train(
+            bp["mamba"], cfg, L.rmsnorm(bp["norm1"], x), kernel_mode=km,
+            return_state=True)
+        return x + y, state
     if kind == "rwkv":
         return _rwkv_block_seq(bp, cfg, x, km, None)
     if kind == "gla":
@@ -246,11 +252,12 @@ def block_decode(bp: dict, cfg: ModelConfig, x: jax.Array, kind: str,
                                  serve_sparse=rt.serve_sparse, kernel_mode=km,
                                  page_table=page_table)
         x = x + y
-        x = x + _mixer_ffn(bp, cfg, L.rmsnorm(bp["norm2"], x), rt)
+        x = x + _mixer_ffn(bp, cfg, L.rmsnorm(bp["norm2"], x), rt,
+                           decode=True)
         return x, cache
     if kind == "mamba":
         y, cache = M.mamba_decode(bp["mamba"], cfg,
-                                  L.rmsnorm(bp["norm1"], x), cache,
+                                  L.rmsnorm(bp["norm1"], x), cache, t,
                                   kernel_mode=km)
         return x + y, cache
     if kind == "rwkv":
@@ -267,7 +274,8 @@ def block_decode(bp: dict, cfg: ModelConfig, x: jax.Array, kind: str,
         y, cache = G.gla_decode(bp["gla"], cfg, L.rmsnorm(bp["norm1"], x),
                                 cache, kernel_mode=km)
         x = x + y
-        x = x + _mixer_ffn(bp, cfg, L.rmsnorm(bp["norm2"], x), rt)
+        x = x + _mixer_ffn(bp, cfg, L.rmsnorm(bp["norm2"], x), rt,
+                           decode=True)
         return x, cache
     raise ValueError(kind)
 

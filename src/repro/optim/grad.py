@@ -62,5 +62,6 @@ def compressed_crosspod_mean(grads: Any, error: Any, mesh,
                 treedef.unflatten([o[1] for o in out]))
 
     spec = jax.tree.map(lambda _: P(), grads)
-    return jax.shard_map(local, mesh=mesh, in_specs=(spec, spec),
-                         out_specs=(spec, spec), check_vma=False)(grads, error)
+    from repro.distributed.sharding import shard_map
+    return shard_map(local, mesh=mesh, in_specs=(spec, spec),
+                     out_specs=(spec, spec), check_vma=False)(grads, error)

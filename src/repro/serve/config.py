@@ -37,6 +37,13 @@ class ServeConfig:
 
     ``kernel_mode`` None inherits the Runtime's mode; anything else is
     normalised through kernels.ops.KernelMode.parse and overrides it.
+
+    ``moe_expert_capacity`` bounds the per-expert token load a decode tick
+    may present to a MoE router: admission defers new requests while the
+    active-slot count (== worst-case tokens any one expert can receive in a
+    tick) would exceed it.  0 = unbounded (the model-side decode path is
+    always no-drop; this knob only throttles admission).  Ignored for
+    dense-FFN configs.
     """
     max_slots: int = 4
     max_len: int = 512
@@ -48,6 +55,7 @@ class ServeConfig:
     seed: int = 0
     policy: str = "continuous"
     kernel_mode: str | None = None
+    moe_expert_capacity: int = 0
 
     def __post_init__(self):
         if self.max_slots < 1:
@@ -74,6 +82,10 @@ class ServeConfig:
                                  "(page 0 is the reserved null page)")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if self.moe_expert_capacity < 0:
+            raise ValueError(f"moe_expert_capacity must be >= 0 "
+                             f"(0 = unbounded), got "
+                             f"{self.moe_expert_capacity}")
         if self.kernel_mode is not None:
             # normalise via the enum (aliases accepted, unknowns raise)
             object.__setattr__(self, "kernel_mode",

@@ -27,6 +27,17 @@ tests/test_serve_engine.py for the batch-invariance check.
 scheduling (admit only when ALL slots are free, barrier until all
 finish): the baseline the benchmarks compare against.
 
+Per-slot state is a tagged union over kvcache.CacheSpec layouts, resolved
+per layer from ``cfg.layer_kinds()`` (``layout_summary()`` prints it):
+full/ring/paged KV for attention layers, O(1) recurrent state for
+mamba (ssm carry + chunk-replay buffers), rwkv (wkv + shifts) and gla
+(state matrix).  Recurrent-only configs have ``_chunk = 1``: the whole
+prompt absorbs through batch-1 prefill (one compile per prompt length)
+and decode carries pure state — hybrid stacks mix both in one pytree.
+MoE configs decode with no-drop expert capacity (models/moe
+decode_capacity); ``ServeConfig.moe_expert_capacity`` optionally bounds
+the per-expert tick load via admission control instead of token drops.
+
 ``ServeConfig(layout="paged")`` swaps the dense per-slot full caches for a
 block-paged KV pool (kvcache.CacheSpec layout="paged"): one refcounted
 page arena per full-attention layer, per-slot int32 page tables passed to
@@ -55,7 +66,7 @@ from repro.kernels import ops
 from repro.models import attention as A
 from repro.models import kvcache as KV
 from repro.models import model as MD
-from repro.models.transformer import Runtime
+from repro.models.transformer import Runtime, layer_cache_spec
 from repro.serve.config import ServeConfig
 from repro.serve.kvpool import PagePool, PrefixEntry, RadixIndex
 from repro.serve.sampler import make_sampler, sample_token
@@ -106,6 +117,9 @@ class EngineStats:
     cow_copies: int = 0           # copy-on-write page copies
     prefix_evictions: int = 0     # trie entries evicted to free pages
     pool_peak_pages: int = 0      # peak pages in use during this run
+    moe_capacity_deferrals: int = 0  # admissions deferred by the MoE
+                                     # expert-capacity bound (ticks a ready
+                                     # request waited for a slot to retire)
 
     @property
     def slot_utilization(self) -> float:
@@ -213,8 +227,27 @@ class ServeEngine:
                                      num_pages=num_pages)
         self._empty1 = MD.init_caches(None, cfg, 1, max_len, rt,
                                       self._cache_dtype)
-        self._paged_stacked, self._paged_tail = self._find_paged_layers()
+        # explicit per-layer CacheSpec union: the engine's source of truth
+        # for which layers are shared page arenas vs per-slot rows (ring /
+        # full / recurrent).  Mirrors the cache pytree structure.
+        self._layer_specs = self._build_layer_specs(page_size, num_pages)
+        self._paged_stacked = tuple(
+            s.layout == "paged" for s in (self._layer_specs["stacked"] or ()))
+        self._paged_tail = tuple(
+            s.layout == "paged" for s in self._layer_specs["tail"])
+        # spec-derived flags must agree with the allocated structure
+        assert self._paged_stacked == tuple(
+            KV.is_paged(c) for c in (self.caches["stacked"] or ()))
+        assert self._paged_tail == tuple(
+            KV.is_paged(c) for c in self.caches["tail"])
         self._rest_is_empty = self._paged and not self._has_non_paged_rows()
+        if config.moe_expert_capacity and cfg.moe is None:
+            raise ValueError(
+                f"moe_expert_capacity={config.moe_expert_capacity} is set "
+                f"but config {cfg.name!r} has no MoE layers; drop the bound "
+                f"or serve a MoE config")
+        self._moe_slot_cap = (config.moe_expert_capacity
+                              if cfg.moe is not None else 0)
         self._page_bytes = self._compute_page_bytes()
         self._slots = [_Slot() for _ in range(max_slots)]
         self._results: dict[int, RequestResult] = {}
@@ -236,17 +269,49 @@ class ServeEngine:
                                       donate_argnums=(0,))
         self._copy_page = jax.jit(self._copy_page_fn, donate_argnums=(0,))
         self._scrub = jax.jit(self._scrub_fn, donate_argnums=(0,))
+        self._scrub_slot = jax.jit(self._scrub_slot_fn, donate_argnums=(0,))
         self._sample1 = jax.jit(
             lambda lg, uid, temp: sample_token(
                 lg, self._fold_key(uid, jnp.int32(0)), temp, config.top_k))
 
-    # -- paged-layer structure helpers ------------------------------------
+    # -- layer-layout structure helpers -----------------------------------
 
-    def _find_paged_layers(self):
-        """(stacked_flags, tail_flags): which layer trees are page arenas."""
-        stacked = tuple(KV.is_paged(c) for c in (self.caches["stacked"] or ()))
-        tail = tuple(KV.is_paged(c) for c in self.caches["tail"])
-        return stacked, tail
+    def _build_layer_specs(self, page_size: int, num_pages: int) -> dict:
+        """Resolve every layer's serving CacheSpec (the tagged slot-state
+        union: paged / full / ring KV, mamba / rwkv / gla recurrent state).
+        Keyed like the cache pytree: one spec per scanned pattern position
+        plus one per unrolled tail layer."""
+        cfg = self.cfg
+        kinds = cfg.layer_kinds()
+        plen = len(cfg.layer_pattern)
+        n_groups, tail = (divmod(cfg.n_layers, plen) if cfg.scan_layers
+                          else (0, cfg.n_layers))
+
+        def spec(kind):
+            return layer_cache_spec(cfg, kind, self.max_slots, self.max_len,
+                                    self.rt, self._cache_dtype,
+                                    page_size=page_size, num_pages=num_pages)
+
+        stacked = (tuple(spec(k) for k in cfg.layer_pattern)
+                   if n_groups else None)
+        return {"stacked": stacked,
+                "tail": tuple(spec(kinds[n_groups * plen + i])
+                              for i in range(tail))}
+
+    def layout_summary(self) -> list[dict]:
+        """Ordered per-layer {layer, kind, layout} — the engine's resolved
+        slot-state union over the whole stack (see README "serving the
+        model zoo")."""
+        kinds = self.cfg.layer_kinds()
+        sp = self._layer_specs
+        n_tail = len(sp["tail"])
+        n_scanned = self.cfg.n_layers - n_tail
+        out = []
+        for i in range(self.cfg.n_layers):
+            spec = (sp["stacked"][i % len(self.cfg.layer_pattern)]
+                    if i < n_scanned else sp["tail"][i - n_scanned])
+            out.append({"layer": i, "kind": kinds[i], "layout": spec.layout})
+        return out
 
     def _has_non_paged_rows(self) -> bool:
         """True when any layer keeps per-slot (non-arena) state — ring
@@ -462,6 +527,32 @@ class ServeEngine:
                      zip(self._paged_tail, caches["tail"]))
         return {"stacked": stacked, "tail": tail}
 
+    def _scrub_slot_fn(self, big, empty, slot):
+        """Retirement hygiene: reset one slot's rows in every NON-paged
+        layer back to the empty cache (full/ring rows to pos -1, recurrent
+        states and ssd replay buffers to zeros).  Admission always
+        overwrites these rows anyway, but scrubbing at retirement keeps a
+        finished request's KV and state from outliving it — no layout of
+        the union is exempt (paged arenas are scrubbed page-wise by
+        `_scrub_pages` instead)."""
+        def one(is_p, bg, sm, stacked):
+            if is_p:
+                return bg
+            if stacked:
+                return jax.tree.map(lambda b_, s_: b_.at[:, slot].set(
+                    s_[:, 0].astype(b_.dtype)), bg, sm)
+            return jax.tree.map(lambda b_, s_: b_.at[slot].set(
+                s_[0].astype(b_.dtype)), bg, sm)
+
+        stacked = None
+        if big["stacked"] is not None:
+            stacked = tuple(one(is_p, bg, sm, True) for is_p, bg, sm in
+                            zip(self._paged_stacked, big["stacked"],
+                                empty["stacked"]))
+        tail = tuple(one(is_p, bg, sm, False) for is_p, bg, sm in
+                     zip(self._paged_tail, big["tail"], empty["tail"]))
+        return {"stacked": stacked, "tail": tail}
+
     def _scrub_pages(self, freed: list) -> None:
         """Host wrapper: scrub freed pages in fixed-size batches so the
         jitted scrub never retraces."""
@@ -560,6 +651,16 @@ class ServeEngine:
         for i, slot in enumerate(self._slots):
             if slot.state != FREE:
                 continue
+            if self._moe_slot_cap and self.num_active >= self._moe_slot_cap:
+                # expert-capacity accounting: each active slot contributes at
+                # most one token per decode tick, and one expert can receive
+                # at most one routed copy of each token — so active slots ==
+                # the worst-case per-expert load.  Hold admissions until a
+                # retirement frees capacity (never drop tokens mid-decode).
+                nxt = self.scheduler.next_arrival()
+                if nxt is not None and nxt <= self.vtime:
+                    self.stats.moe_capacity_deferrals += 1
+                return
             req = self.scheduler.pop_ready(self.vtime)
             if req is None:
                 return
@@ -908,6 +1009,8 @@ class ServeEngine:
             self._pt[idx, :] = 0
             s.pages = None
             s.page_budget = 0
+        self.caches = self._scrub_slot(self.caches, self._empty1,
+                                       jnp.int32(idx))
         s.state = FREE
         s.req = None
         s.input_x = None

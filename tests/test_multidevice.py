@@ -13,7 +13,11 @@ import pytest
 
 SCRIPT = r"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# the parent test injects --xla_force_host_platform_device_count=8; keep a
+# belt-and-braces append here for anyone running the script standalone
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -24,7 +28,10 @@ from repro.models import moe as MOE
 from repro.models.transformer import Runtime
 from repro.optim import adamw
 
-assert jax.device_count() == 8
+if jax.device_count() != 8:
+    # non-CPU backends ignore the host-platform flag; nothing to test here
+    print("DEVICE-COUNT-SKIP", jax.device_count(), jax.default_backend())
+    raise SystemExit(0)
 
 # ---- 1. sharded train step == single device ------------------------------
 cfg = reduced(get_config("bitnet-1.3b"))
@@ -108,15 +115,16 @@ print("ALL-MULTIDEVICE-OK")
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(
-    strict=False,
-    reason="known seed failure: needs 8 virtual CPU devices the runner "
-           "may lack / subprocess semantics drift (see CHANGES.md PR 1)")
 def test_multidevice_semantics():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, env=env, cwd=os.path.dirname(
                            os.path.dirname(os.path.abspath(__file__))),
                        timeout=900)
+    if "DEVICE-COUNT-SKIP" in r.stdout:
+        pytest.skip("runner cannot provide 8 virtual CPU devices: "
+                    + r.stdout.strip().splitlines()[-1])
     assert "ALL-MULTIDEVICE-OK" in r.stdout, r.stdout + "\n" + r.stderr
