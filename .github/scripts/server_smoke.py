@@ -1,0 +1,69 @@
+"""CI smoke client for the HTTP front door (see ci.yml server-smoke job).
+
+Waits for /healthz, streams one SSE completion, checks /metrics counted
+it, and exits 0.  Stdlib only: http.client against a localhost port.
+
+Usage: python .github/scripts/server_smoke.py PORT
+"""
+import http.client
+import json
+import sys
+import time
+
+PORT = int(sys.argv[1]) if len(sys.argv) > 1 else 8123
+
+
+def req(method, path, body=None):
+    conn = http.client.HTTPConnection("127.0.0.1", PORT, timeout=120)
+    payload = json.dumps(body) if body is not None else None
+    conn.request(method, path, body=payload,
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    data = resp.read()
+    conn.close()
+    return resp.status, data
+
+
+def main():
+    # the first compile of the jitted decode step happens server-side; give
+    # the listener (which binds before the engine warms) time to appear
+    deadline = time.time() + 300
+    while True:
+        try:
+            status, data = req("GET", "/healthz")
+            if status == 200 and json.loads(data)["ok"]:
+                break
+        except OSError:
+            pass
+        if time.time() > deadline:
+            sys.exit("server never became healthy")
+        time.sleep(1)
+    print("healthz ok")
+
+    status, data = req("POST", "/v1/completions",
+                       {"prompt": list(range(1, 13)), "max_tokens": 6,
+                        "stream": True})
+    assert status == 200, (status, data[:200])
+    events = [ln for ln in data.decode().split("\n\n")
+              if ln.startswith("data: ")]
+    assert events[-1] == "data: [DONE]", events[-1]
+    chunks = [json.loads(e[len("data: "):]) for e in events[:-1]]
+    tokens = [t for c in chunks for t in c["choices"][0]["token_ids"]]
+    assert len(tokens) == 6, tokens
+    usage = chunks[-1]["usage"]
+    assert usage["completion_tokens"] == 6, usage
+    assert usage["slo_met"] is True, usage   # --slo-steps 64 default
+    print(f"streamed completion ok: {tokens}")
+
+    status, data = req("GET", "/metrics")
+    assert status == 200
+    snap = json.loads(data)
+    assert snap["totals"]["requests_finished"] == 1, snap["totals"]
+    assert snap["totals"]["tokens_out"] == 6, snap["totals"]
+    assert snap["totals"]["slo_met"] == 1, snap["totals"]
+    assert snap["engine"]["active_slots"] == 0, snap["engine"]
+    print("metrics ok:", json.dumps(snap["totals"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -56,6 +56,54 @@ def poisson_trace(cfg, n=N_REQ, seed=0):
     return reqs
 
 
+def bursty_trace(cfg, seed=2):
+    """Bursts of loose-SLO bulk work with tight-SLO interactive requests
+    landing mid-burst: the workload where FIFO (arrival order) makes the
+    interactive requests queue behind the whole burst and miss, while
+    deadline scheduling slots them in first."""
+    rng = np.random.default_rng(seed)
+    reqs, uid = [], 0
+    for b in range(3):
+        t0 = b * 40
+        for _ in range(6):          # bulk burst, generous deadline
+            plen = int(rng.integers(16, 40))
+            gen = int(rng.integers(10, 18))
+            reqs.append(Request(
+                uid=uid, prompt=np.asarray(rng.integers(0, cfg.vocab, plen),
+                                           np.int32),
+                max_new_tokens=gen, arrival=t0, slo_steps=150))
+            uid += 1
+        for j in range(2):          # interactive, tight deadline
+            plen = int(rng.integers(4, 10))
+            reqs.append(Request(
+                uid=uid, prompt=np.asarray(rng.integers(0, cfg.vocab, plen),
+                                           np.int32),
+                max_new_tokens=4, arrival=t0 + 2 + 4 * j, slo_steps=22))
+            uid += 1
+    return reqs
+
+
+def _run_slo(cfg, sparams, rt, max_len):
+    """SLO attainment on the bursty trace: deadline scheduling (with
+    preemption) must meet at least as many deadlines as the FIFO
+    baseline."""
+    res = {}
+    for name, sched_kw in (
+            ("fifo", dict(scheduler="fifo")),
+            ("deadline", dict(scheduler="deadline", preemption=True))):
+        eng = ServeEngine(cfg, sparams, rt,
+                          config=ServeConfig(max_slots=SLOTS,
+                                             max_len=max_len, **sched_kw))
+        results = eng.timed_replay(bursty_trace(cfg))
+        res[name] = {**_summarize(eng, results),
+                     "slo": _attainment(results),
+                     "preempt": eng.stats.preemptions}
+    assert res["deadline"]["slo"] >= res["fifo"]["slo"], \
+        (f"deadline scheduling met fewer SLOs than FIFO: "
+         f"{res['deadline']['slo']:.2f} < {res['fifo']['slo']:.2f}")
+    return res
+
+
 def shared_prefix_trace(cfg, n=8, stem=32, tail=6, seed=1):
     """n prompts sharing a stem-token prefix, arriving far enough apart
     that the first finishes registering before the rest hit the trie."""
@@ -71,16 +119,23 @@ def shared_prefix_trace(cfg, n=8, stem=32, tail=6, seed=1):
 
 
 def _summarize(eng, results):
+    # guard the empty trace: np.percentile on a zero-length array raises
     lat = np.asarray([r.latency_steps for r in results.values()])
     st = eng.stats
     return {
         "tok_s": st.generated_tokens / max(st.wall_seconds, 1e-9),
-        "p50": float(np.percentile(lat, 50)),
-        "p95": float(np.percentile(lat, 95)),
+        "p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
+        "p95": float(np.percentile(lat, 95)) if lat.size else 0.0,
         "steps": st.decode_steps,
         "util": st.slot_utilization,
         "wall_us": st.wall_seconds * 1e6,
     }
+
+
+def _attainment(results):
+    """Fraction of SLO-tracked requests finishing within their deadline."""
+    tracked = [r for r in results.values() if r.slo_steps is not None]
+    return sum(r.slo_met for r in tracked) / max(len(tracked), 1)
 
 
 def _run_policy(cfg, sparams, rt, policy, max_len):
@@ -193,6 +248,22 @@ def run():
                     f"pages_peak={pool['pages_peak']}/"
                     f"{pool['num_pages']};"
                     f"cow={paged_eng.stats.cow_copies}"),
+    })
+
+    slo = _run_slo(cfg, sparams, rt, max_len)
+    d, f = slo["deadline"], slo["fifo"]
+    rows.append({
+        "name": "serve/slo_deadline",
+        "us_per_call": d["wall_us"] / max(d["steps"], 1),
+        "derived": (f"slo_attain={d['slo']:.2f};p95={d['p95']:.0f};"
+                    f"preempt={d['preempt']};tok_s={d['tok_s']:.1f};"
+                    f"steps={d['steps']}"),
+    })
+    rows.append({
+        "name": "serve/slo_attainment", "us_per_call": 0.0,
+        "derived": (f"deadline={d['slo']:.2f};fifo={f['slo']:.2f};"
+                    f"p95_deadline={d['p95']:.0f};p95_fifo={f['p95']:.0f};"
+                    f"preemptions={d['preempt']}"),
     })
 
     rr = _run_recurrent()

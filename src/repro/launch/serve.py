@@ -9,6 +9,12 @@ engine prefill/decode them through per-sequence KV state.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch bitnet-1.3b --reduced \
       --prompt-len 64 --gen 32 --requests 4 --stagger 4 --temperature 0.8
+
+``--serve-http`` flips the CLI from trace-replay into the always-on front
+door: an asyncio HTTP server (repro.serve.server) over the same engine,
+with an OpenAI-style streaming completions endpoint, 429 backpressure,
+``/metrics`` live telemetry and SIGINT/SIGTERM-clean shutdown.
+``--metrics-out`` writes the JSON-lines telemetry log in either mode.
 """
 
 from __future__ import annotations
@@ -104,7 +110,40 @@ def main(argv=None):
                          "by deferring admissions (MoE configs only; 0 = "
                          "unbounded — decode itself never drops tokens)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scheduler", choices=["fifo", "deadline"], default=None,
+                    help="admission order: 'fifo' (aged priority-then-"
+                         "arrival) or 'deadline' (earliest-effective-"
+                         "deadline-first over Request.slo_steps); defaults "
+                         "to 'deadline' under --serve-http, else 'fifo'")
+    ap.add_argument("--slo-steps", type=int, default=0,
+                    help="per-request deadline budget in virtual decode "
+                         "steps (0 = no SLO); attached to every trace "
+                         "request and used as the server's default for "
+                         "requests that don't carry slo_steps")
+    ap.add_argument("--preemption", action="store_true",
+                    help="deadline scheduler only: truncate-and-retire the "
+                         "youngest over-SLO-budget slot when the queue head "
+                         "would otherwise miss its deadline")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append JSON-lines telemetry (one line per "
+                         "finished request + periodic tick snapshots) to "
+                         "PATH")
+    ap.add_argument("--serve-http", action="store_true",
+                    help="run the always-on HTTP front door instead of a "
+                         "trace replay (POST /v1/completions with "
+                         "stream=true, GET /metrics, GET /healthz; "
+                         "SIGINT/SIGTERM shut down cleanly)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="listen port for --serve-http (0 = ephemeral)")
+    ap.add_argument("--max-queue-depth", type=int, default=64,
+                    help="queued requests beyond which the server answers "
+                         "429 (backpressure)")
     args = ap.parse_args(argv)
+    if args.scheduler is None:
+        args.scheduler = "deadline" if args.serve_http else "fifo"
+    if args.preemption and args.scheduler != "deadline":
+        ap.error("--preemption requires --scheduler deadline")
 
     # gate bad configs here with argparse-style errors instead of letting
     # them traceback deep inside cache/engine init
@@ -127,7 +166,9 @@ def main(argv=None):
                          prefix_sharing=not args.no_prefix_sharing,
                          top_k=args.top_k, seed=args.seed,
                          policy=args.policy,
-                         moe_expert_capacity=args.moe_expert_capacity)
+                         moe_expert_capacity=args.moe_expert_capacity,
+                         scheduler=args.scheduler,
+                         preemption=args.preemption)
         eng = build_engine(cfg, rt, config=sc)
     except ValueError as e:
         ap.error(f"config not serveable: {e}")
@@ -140,12 +181,19 @@ def main(argv=None):
     print("[serve] slot-state layouts: "
           + ", ".join(f"{k} x{v}" for k, v in layouts.items()))
 
+    from repro.serve.metrics import Telemetry
+    tele = Telemetry(engine=eng, jsonl_path=args.metrics_out)
+
+    if args.serve_http:
+        return _serve_http(args, eng, tele)
+
     rng = np.random.default_rng(args.seed)
+    slo = args.slo_steps if args.slo_steps > 0 else None
     for i in range(args.requests):
         eng.submit(Request(uid=i, prompt=_make_prompt(cfg, rng, args.prompt_len),
                            max_new_tokens=args.gen,
                            temperature=args.temperature,
-                           arrival=i * args.stagger))
+                           arrival=i * args.stagger, slo_steps=slo))
     results = eng.run()
 
     st = eng.stats
@@ -169,9 +217,59 @@ def main(argv=None):
                   "--no-sparse to page the global layers")
     for uid in sorted(results):
         r = results[uid]
+        slo_note = "" if r.slo_steps is None else \
+            f", slo {'MET' if r.slo_met else 'MISS'} ({r.slo_steps})"
         print(f"[serve] req {uid}: ttft {r.ttft_steps} steps, latency "
-              f"{r.latency_steps} steps, ids {r.tokens[:8].tolist()}...")
+              f"{r.latency_steps} steps{slo_note}, "
+              f"ids {r.tokens[:8].tolist()}...")
+    if args.slo_steps > 0:
+        tracked = [r for r in results.values() if r.slo_steps is not None]
+        met = sum(r.slo_met for r in tracked)
+        print(f"[serve] SLO attainment: {met}/{len(tracked)} "
+              f"({met/max(len(tracked), 1):.0%}) at {args.slo_steps} steps, "
+              f"{eng.stats.preemptions} preemptions")
+    if args.metrics_out:
+        tele.close()
+        print(f"[serve] telemetry JSONL -> {args.metrics_out}")
     return results
+
+
+def _serve_http(args, eng, tele):
+    """The always-on front door: run until SIGINT/SIGTERM, shut down
+    cleanly (joins the engine thread, closes the telemetry log)."""
+    import asyncio
+    import contextlib
+    import signal
+
+    from repro.serve.server import ServeHTTPServer
+
+    default_slo = args.slo_steps if args.slo_steps > 0 else None
+    srv = ServeHTTPServer(eng, args.host, args.port,
+                          max_queue_depth=args.max_queue_depth,
+                          default_slo_steps=default_slo, telemetry=tele)
+
+    async def _amain():
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            with contextlib.suppress(NotImplementedError):
+                loop.add_signal_handler(sig, stop.set)
+        await srv.start()
+        print(f"[serve] http front door on http://{srv.host}:{srv.port} "
+              f"(scheduler={args.scheduler}, "
+              f"default_slo={default_slo}, "
+              f"max_queue_depth={args.max_queue_depth}); "
+              f"POST /v1/completions, GET /metrics", flush=True)
+        await stop.wait()
+        print("[serve] shutting down...", flush=True)
+        await srv.stop()
+        st = eng.stats
+        print(f"[serve] clean shutdown: {st.decode_steps} decode steps, "
+              f"{st.generated_tokens} tokens, "
+              f"{tele.requests_finished} requests served", flush=True)
+
+    asyncio.run(_amain())
+    return None
 
 
 if __name__ == "__main__":

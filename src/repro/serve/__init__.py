@@ -7,18 +7,26 @@ a free slot while the other slots keep decoding, because the KV caches
 carry per-sequence positions (models/kvcache.py).
 
 Modules:
-  scheduler — Request + arrival/priority queue (FifoScheduler)
+  scheduler — Request + arrival/priority queues (FifoScheduler with aging,
+              DeadlineScheduler: earliest-effective-deadline-first)
   sampler   — greedy / temperature / top-k next-token sampling
   config    — ServeConfig: the validated engine configuration object
   kvpool    — PagePool / RadixIndex: refcounted paged-KV bookkeeping
   engine    — ServeEngine: slot state machine + the jitted decode step
+              (run() drains a trace; run_forever() is the always-on
+              step-driver the HTTP server owns)
+  metrics   — Telemetry: per-request SLO records + rolling live gauges
+  server    — ServeHTTPServer: asyncio streaming front door (OpenAI-style
+              completions endpoint, backpressure, /metrics)
 """
 from repro.serve.config import ServeConfig
 from repro.serve.engine import EngineStats, RequestResult, ServeEngine
 from repro.serve.kvpool import PagePool, PrefixEntry, RadixIndex
+from repro.serve.metrics import Telemetry
 from repro.serve.sampler import make_sampler, sample_token
-from repro.serve.scheduler import FifoScheduler, Request
+from repro.serve.scheduler import DeadlineScheduler, FifoScheduler, Request
 
 __all__ = ["ServeEngine", "ServeConfig", "EngineStats", "RequestResult",
-           "FifoScheduler", "Request", "make_sampler", "sample_token",
+           "FifoScheduler", "DeadlineScheduler", "Request", "Telemetry",
+           "make_sampler", "sample_token",
            "PagePool", "PrefixEntry", "RadixIndex"]

@@ -18,6 +18,7 @@ __all__ = ["ServeConfig"]
 
 _POLICIES = ("continuous", "wave")
 _LAYOUTS = ("auto", "paged")
+_SCHEDULERS = ("fifo", "deadline")
 
 
 @dataclass(frozen=True)
@@ -44,6 +45,17 @@ class ServeConfig:
     tick) would exceed it.  0 = unbounded (the model-side decode path is
     always no-drop; this knob only throttles admission).  Ignored for
     dense-FFN configs.
+
+    ``scheduler`` picks the admission order: "fifo" (priority-then-arrival
+    with aging) or "deadline" (earliest-effective-deadline-first over
+    ``Request.slo_steps``; requests without an SLO get ``slo_default_steps``
+    plus an aging penalty per priority level).  ``aging_steps`` is the
+    queue wait that decays effective priority by one level (0 = strict
+    priority, starvation-prone).  ``preemption`` (deadline scheduler only)
+    lets the engine truncate-and-retire the youngest active slot that has
+    already blown its OWN deadline when the queue head would otherwise
+    miss its SLO — the truncated result is delivered with
+    ``preempted=True``.
     """
     max_slots: int = 4
     max_len: int = 512
@@ -56,6 +68,10 @@ class ServeConfig:
     policy: str = "continuous"
     kernel_mode: str | None = None
     moe_expert_capacity: int = 0
+    scheduler: str = "fifo"
+    aging_steps: int = 64
+    slo_default_steps: int = 256
+    preemption: bool = False
 
     def __post_init__(self):
         if self.max_slots < 1:
@@ -86,6 +102,18 @@ class ServeConfig:
             raise ValueError(f"moe_expert_capacity must be >= 0 "
                              f"(0 = unbounded), got "
                              f"{self.moe_expert_capacity}")
+        if self.scheduler not in _SCHEDULERS:
+            raise ValueError(f"unknown scheduler {self.scheduler!r}: valid "
+                             f"schedulers are {', '.join(_SCHEDULERS)}")
+        if self.aging_steps < 0:
+            raise ValueError(f"aging_steps must be >= 0 (0 = strict "
+                             f"priority), got {self.aging_steps}")
+        if self.slo_default_steps < 1:
+            raise ValueError(f"slo_default_steps must be >= 1, got "
+                             f"{self.slo_default_steps}")
+        if self.preemption and self.scheduler != "deadline":
+            raise ValueError("preemption requires scheduler='deadline' "
+                             "(only deadlines define an over-SLO budget)")
         if self.kernel_mode is not None:
             # normalise via the enum (aliases accepted, unknowns raise)
             object.__setattr__(self, "kernel_mode",

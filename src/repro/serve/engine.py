@@ -53,6 +53,7 @@ memory therefore tracks live tokens, not ``max_slots * max_len``.
 
 from __future__ import annotations
 
+import threading
 import time
 import warnings
 from dataclasses import dataclass, field, replace
@@ -70,7 +71,7 @@ from repro.models.transformer import Runtime, layer_cache_spec
 from repro.serve.config import ServeConfig
 from repro.serve.kvpool import PagePool, PrefixEntry, RadixIndex
 from repro.serve.sampler import make_sampler, sample_token
-from repro.serve.scheduler import FifoScheduler, Request
+from repro.serve.scheduler import DeadlineScheduler, FifoScheduler, Request
 
 __all__ = ["ServeEngine", "ServeConfig", "EngineStats", "RequestResult"]
 
@@ -88,6 +89,8 @@ class RequestResult:
     finish_vtime: int
     admitted_with_active: int = 0  # slots already mid-stream at admission
                                    # (admitted in an earlier tick)
+    slo_steps: int | None = None   # deadline budget the request carried
+    preempted: bool = False        # truncated by the deadline-rescue hook
 
     @property
     def latency_steps(self) -> int:
@@ -96,6 +99,19 @@ class RequestResult:
     @property
     def ttft_steps(self) -> int:
         return self.first_token_vtime - self.arrival
+
+    @property
+    def queue_wait_steps(self) -> int:
+        return self.admit_vtime - self.arrival
+
+    @property
+    def slo_met(self) -> bool:
+        """True when the request finished within its deadline budget (a
+        preempted request is truncated, so it never counts as met);
+        requests without an SLO vacuously meet it."""
+        if self.slo_steps is None:
+            return True
+        return not self.preempted and self.latency_steps <= self.slo_steps
 
 
 @dataclass
@@ -120,6 +136,8 @@ class EngineStats:
     moe_capacity_deferrals: int = 0  # admissions deferred by the MoE
                                      # expert-capacity bound (ticks a ready
                                      # request waited for a slot to retire)
+    preemptions: int = 0          # over-budget slots truncated to rescue a
+                                  # deadline-critical queued request
 
     @property
     def slot_utilization(self) -> float:
@@ -190,9 +208,29 @@ class ServeEngine:
         max_slots, max_len = config.max_slots, config.max_len
         self.max_slots, self.max_len = max_slots, max_len
         self.policy = config.policy
-        self.scheduler = FifoScheduler()
+        if config.scheduler == "deadline":
+            self.scheduler = DeadlineScheduler(
+                aging_steps=config.aging_steps,
+                default_slo=config.slo_default_steps)
+        else:
+            self.scheduler = FifoScheduler(aging_steps=config.aging_steps)
+        self._preempt = config.preemption
         self.stats = EngineStats(max_slots=max_slots)
         self.vtime = 0
+        # per-engine baseline of the PROCESS-WIDE kernels/ops fallback
+        # counters: stats report deltas vs this snapshot, so two engines in
+        # one process never attribute each other's fallbacks
+        self._fallback_base: dict = dict(ops.fallback_counts())
+        # live-serving hooks (all optional): the HTTP front door streams
+        # tokens through on_token/on_finish; a metrics.Telemetry sink
+        # attached as .telemetry observes admissions/ticks/finishes
+        self.telemetry = None
+        self.on_token = None      # callable(uid, token_id) per sampled token
+        self.on_finish = None     # callable(RequestResult) at retirement
+        # submit/pop_result may be called from another thread than the one
+        # driving run_forever (the HTTP server's event loop vs the engine
+        # thread); this lock covers the scheduler + result-dict handoffs
+        self._lock = threading.RLock()
         self._uses_embeds = MD.uses_embeds(cfg)
         self._cache_dtype = jnp.dtype(cfg.dtype)
         kinds = cfg.layer_kinds()
@@ -567,7 +605,12 @@ class ServeEngine:
 
     # -- public API -------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
+    def validate(self, req: Request) -> None:
+        """Shape/capacity checks for a prospective request (raises
+        ValueError).  Pure read — safe to call from any thread before
+        handing the request to `submit` (the HTTP front door validates in
+        its event loop so a bad request 400s without touching the engine
+        thread)."""
         if req.prompt_len < 1:
             raise ValueError(f"request {req.uid}: empty prompt")
         if req.max_new_tokens < 1:
@@ -585,14 +628,51 @@ class ServeEngine:
                 raise ValueError(
                     f"request {req.uid}: needs up to {worst} KV pages but "
                     f"the pool holds {usable} (raise num_pages or page_size)")
-        # duplicate uids among in-flight work would collide in the results
-        # dict AND share a sampling-key stream (correlated draws)
-        in_flight = {s.req.uid for s in self._slots if s.req is not None}
-        if req.uid in in_flight or req.uid in self._pending_uids \
-                or req.uid in self._results:
-            raise ValueError(f"request uid {req.uid} already in flight")
-        self._pending_uids.add(req.uid)
-        self.scheduler.add(req)
+
+    def submit(self, req: Request) -> None:
+        self.validate(req)
+        with self._lock:
+            # duplicate uids among in-flight work would collide in the
+            # results dict AND share a sampling-key stream (correlated
+            # draws); a finished-but-unclaimed result would be clobbered —
+            # pop_result/drain_results release the uid for reuse
+            in_flight = {s.req.uid for s in self._slots if s.req is not None}
+            if req.uid in in_flight or req.uid in self._pending_uids:
+                raise ValueError(f"request uid {req.uid} already in flight")
+            if req.uid in self._results:
+                raise ValueError(
+                    f"request uid {req.uid} has an unclaimed result; "
+                    f"pop_result/drain_results it before resubmitting")
+            self._pending_uids.add(req.uid)
+            self.scheduler.add(req)
+
+    def pop_result(self, uid: int) -> RequestResult | None:
+        """Claim (and remove) one finished result, releasing its uid for
+        reuse; None when the uid has no finished result yet.  The
+        long-running counterpart of `run()`'s bulk drain — an always-on
+        server pops each result as it streams out so `_results` stays
+        bounded and uids can cycle."""
+        with self._lock:
+            return self._results.pop(uid, None)
+
+    def drain_results(self) -> dict[int, RequestResult]:
+        """Claim every finished result (uid -> RequestResult), releasing
+        all their uids for reuse."""
+        with self._lock:
+            out, self._results = self._results, {}
+            return out
+
+    def kernel_fallback_deltas(self) -> dict:
+        """THIS engine's silent jnp-reference fallbacks: the process-wide
+        kernels/ops counters minus the baseline snapshotted at
+        construction / reset_clock, so co-resident engines (two engines in
+        one benchmark process) never attribute each other's fallbacks."""
+        out = {}
+        for (op, key), cnt in ops.fallback_counts().items():
+            delta = cnt - self._fallback_base.get((op, key), 0)
+            if delta > 0:
+                out[f"{op}{key}"] = delta
+        return out
 
     @property
     def num_active(self) -> int:
@@ -608,6 +688,7 @@ class ServeEngine:
         self.stats = EngineStats(
             max_slots=self.max_slots,
             autotune_timed_runs=self.stats.autotune_timed_runs)
+        self._fallback_base = dict(ops.fallback_counts())
 
     def timed_replay(self, trace) -> dict[int, RequestResult]:
         """Replay `trace` twice — once to pay the XLA compiles, then timed
@@ -634,20 +715,100 @@ class ServeEngine:
                 continue
             self.step_decode()
         self.stats.wall_seconds += time.perf_counter() - t0
-        # surface silent jnp-reference fallbacks (process-wide counters; a
-        # populated dict under a kernel mode means some layer shapes are not
-        # slab-aligned and are quietly running the slow reference path)
-        self.stats.kernel_fallbacks = {
-            f"{op}{key}": cnt for (op, key), cnt in
-            ops.fallback_counts().items()}
-        out, self._results = self._results, {}
-        return out
+        # surface THIS engine's silent jnp-reference fallbacks (deltas vs
+        # the per-engine baseline; a populated dict under a kernel mode
+        # means some layer shapes are not slab-aligned and are quietly
+        # running the slow reference path)
+        self.stats.kernel_fallbacks = self.kernel_fallback_deltas()
+        return self.drain_results()
+
+    def run_forever(self, *, should_stop=None, poll=None,
+                    idle_wait=None) -> None:
+        """Always-on step-driver: the sibling of `run()` the HTTP front
+        door owns.  Never drains `_results` — callers consume results
+        incrementally via `on_finish` / `pop_result` (which is what keeps
+        memory and the uid space bounded over an unbounded request
+        stream).
+
+        should_stop: checked once per iteration; True exits the loop.
+        poll: called once per iteration before admission — the server
+            drains its thread-safe submission inbox here so `submit` runs
+            on the engine thread (the event loop never blocks on a jitted
+            prefill).
+        idle_wait: called when there is nothing active, nothing admissible
+            and nothing future-dated — should block briefly for new work
+            (e.g. wait on an event) and return False to exit.  When None,
+            an idle engine exits (drain-and-return semantics, like run()).
+
+        Future-dated arrivals still fast-forward the virtual clock, so a
+        replayed trace behaves exactly as under `run()`.
+        """
+        t0 = time.perf_counter()
+        try:
+            while True:
+                if should_stop is not None and should_stop():
+                    break
+                if poll is not None:
+                    poll()
+                self._admit_ready()
+                if self.num_active:
+                    self.step_decode()
+                    continue
+                nxt = self.scheduler.next_arrival()
+                if nxt is not None:
+                    if nxt > self.vtime:
+                        self.vtime = nxt   # idle fast-forward
+                    # else: a deferred (paged-pool) admission retries next
+                    # iteration at the same vtime
+                    continue
+                if idle_wait is None or idle_wait() is False:
+                    break
+        finally:
+            self.stats.wall_seconds += time.perf_counter() - t0
+            self.stats.kernel_fallbacks = self.kernel_fallback_deltas()
 
     # -- admission --------------------------------------------------------
 
     def _admit_ready(self) -> None:
+        with self._lock:
+            self._admit_ready_locked()
+
+    def _maybe_preempt(self) -> None:
+        """Deadline rescue: when every slot is busy and the queue head
+        would miss its SLO even if admitted right now, truncate-and-retire
+        the YOUNGEST active slot whose own deadline has already passed
+        (its result is delivered as-is with ``preempted=True``).  Work
+        that can still meet its SLO is never preempted, and requests
+        without an SLO have no budget to be over — they are left alone."""
+        if self.num_active < self.max_slots:
+            return
+        head = self.scheduler.peek_ready(self.vtime)
+        if head is None or head.slo_steps is None:
+            return
+        slack = head.arrival + head.slo_steps - self.vtime
+        # steps to finish once admitted: the unabsorbed prompt tail feeds
+        # one token per tick, then one tick per generated token
+        prefix = (head.prompt_len // self._chunk) * self._chunk
+        needed = (head.prompt_len - prefix) + head.max_new_tokens
+        if slack > needed:
+            return   # still meetable without making room
+        victim = None
+        for i, s in enumerate(self._slots):
+            if s.state != DECODE or s.req is None or s.req.slo_steps is None:
+                continue
+            if self.vtime <= s.req.arrival + s.req.slo_steps:
+                continue   # within budget: not preemptible
+            if victim is None or s.admit_vtime > self._slots[victim].admit_vtime:
+                victim = i
+        if victim is not None:
+            self.stats.preemptions += 1
+            self._retire(victim, preempted=True)
+
+    def _admit_ready_locked(self) -> None:
         if self.policy == "wave" and self.num_active:
             return
+        if self._preempt:
+            self._maybe_preempt()
         for i, slot in enumerate(self._slots):
             if slot.state != FREE:
                 continue
@@ -716,6 +877,8 @@ class ServeEngine:
         when the whole prompt is absorbed, else token-by-token tail feed
         from position ``absorbed``."""
         p = req.prompt_len
+        if self.telemetry is not None:
+            self.telemetry.on_admit(req, self.vtime)
         if absorbed == p:
             tok = int(self._sample1(jnp.asarray(logits), jnp.int32(req.uid),
                                     jnp.float32(req.temperature)))
@@ -725,6 +888,8 @@ class ServeEngine:
             slot.input_tok = tok
             slot.input_pos = p
             self.stats.generated_tokens += 1
+            if self.on_token is not None:
+                self.on_token(req.uid, tok)
             if self._finished(slot, tok):
                 self._retire(idx)
         else:
@@ -921,6 +1086,7 @@ class ServeEngine:
     # -- the decode tick --------------------------------------------------
 
     def step_decode(self) -> None:
+        tick_t0 = time.perf_counter()
         b = self.max_slots
         tok = np.zeros((b,), np.int32)
         # paged: inactive rows carry t = -1 so their writes land on the null
@@ -980,12 +1146,18 @@ class ServeEngine:
             elif s.state == DECODE:
                 self._deliver(i, int(next_tok[i]))
 
+        if self.telemetry is not None:
+            self.telemetry.on_tick(self, int(active.sum()),
+                                   time.perf_counter() - tick_t0)
+
     def _deliver(self, idx: int, tok: int) -> None:
         s = self._slots[idx]
         s.out.append(tok)
         s.input_tok = tok
         s.input_pos = s.req.prompt_len + len(s.out) - 1
         self.stats.generated_tokens += 1
+        if self.on_token is not None:
+            self.on_token(s.req.uid, tok)
         if self._finished(s, tok):
             self._retire(idx)
 
@@ -993,15 +1165,17 @@ class ServeEngine:
         return (len(s.out) >= s.req.max_new_tokens
                 or (s.req.eos_id is not None and tok == s.req.eos_id))
 
-    def _retire(self, idx: int) -> None:
+    def _retire(self, idx: int, preempted: bool = False) -> None:
         s = self._slots[idx]
         r = s.req
-        self._results[r.uid] = RequestResult(
+        result = RequestResult(
             uid=r.uid, tokens=np.asarray(s.out, np.int32),
             prompt_len=r.prompt_len, arrival=r.arrival,
             admit_vtime=s.admit_vtime, first_token_vtime=s.first_tok_vtime,
             finish_vtime=self.vtime,
-            admitted_with_active=s.admitted_with_active)
+            admitted_with_active=s.admitted_with_active,
+            slo_steps=r.slo_steps, preempted=preempted)
+        self._results[r.uid] = result
         if self._paged and s.pages is not None:
             held = [pg for pg in s.pages if pg]
             if held:
@@ -1015,6 +1189,10 @@ class ServeEngine:
         s.req = None
         s.input_x = None
         s.tail = None
+        if self.telemetry is not None:
+            self.telemetry.on_finish(result, self)
+        if self.on_finish is not None:
+            self.on_finish(result)
 
     # -- pool introspection ------------------------------------------------
 

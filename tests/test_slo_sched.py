@@ -1,0 +1,256 @@
+"""SLO-aware scheduling: aging, deadlines, preemption, idle fast-forward.
+
+The long-running-server bug this pins: the old FifoScheduler ordered
+strictly by (priority, arrival), so a saturating stream of priority-0
+requests starved priority-1 forever.  Aging makes effective priority
+decay with queue wait (a static heap key — see serve/scheduler.py), and
+the DeadlineScheduler builds earliest-effective-deadline-first admission
+on top of it; the engine's preemption hook truncates over-budget slots to
+rescue deadline-critical arrivals.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import DasConfig, LpsaConfig, ModelConfig, TernaryConfig
+from repro.models import model as MD
+from repro.models.transformer import Runtime
+from repro.serve import (DeadlineScheduler, FifoScheduler, Request,
+                         ServeConfig, ServeEngine)
+
+CFG = ModelConfig(
+    name="tiny-slo", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+    ternary=TernaryConfig(das=DasConfig(16, 8)),
+    lpsa=LpsaConfig(sink=4, window=12, chunk=8),
+    dtype="float32", remat=False, scan_layers=False,
+)
+
+
+@pytest.fixture(scope="module")
+def sparams():
+    params = MD.init_params(jax.random.PRNGKey(0), CFG)
+    return MD.export_serving(params, CFG)
+
+
+def mk(uid, arr, pri=0, slo=None, gen=1, plen=1):
+    return Request(uid=uid, prompt=np.zeros(plen, np.int32),
+                   max_new_tokens=gen, arrival=arr, priority=pri,
+                   slo_steps=slo)
+
+
+# -------------------------------------------------------------------------
+# aging: a saturating high-priority stream cannot starve low priority
+# -------------------------------------------------------------------------
+
+def test_fifo_aging_prevents_starvation():
+    s = FifoScheduler(aging_steps=8)
+    s.add(mk(999, 0, pri=1))           # the low-priority victim
+    uid, now, popped = 0, 0, []
+    # one fresh priority-0 arrival per tick, one admission per tick
+    for now in range(64):
+        s.add(mk(uid, now, pri=0))
+        uid += 1
+        popped.append(s.pop_ready(now).uid)
+        if 999 in popped:
+            break
+    assert 999 in popped, "aged low-priority request never admitted"
+    # it overtakes after waiting ~ aging_steps * (priority gap)
+    assert popped.index(999) <= 2 * 8
+
+
+def test_fifo_aging_zero_is_strict_priority():
+    """aging_steps=0 restores the legacy starvation-prone order (the bug,
+    kept reachable as an explicit opt-out)."""
+    s = FifoScheduler(aging_steps=0)
+    s.add(mk(999, 0, pri=1))
+    for now in range(200):
+        s.add(mk(now, now, pri=0))
+        assert s.pop_ready(now).uid != 999   # starved forever
+
+
+def test_fifo_same_priority_stays_arrival_ordered():
+    s = FifoScheduler(aging_steps=8)
+    for uid, arr in ((0, 3), (1, 1), (2, 2)):
+        s.add(mk(uid, arr))
+    assert [s.pop_ready(10).uid for _ in range(3)] == [1, 2, 0]
+
+
+# -------------------------------------------------------------------------
+# deadline scheduler: EDF over slo_steps with aged defaults
+# -------------------------------------------------------------------------
+
+def test_deadline_orders_by_effective_deadline():
+    s = DeadlineScheduler(aging_steps=8, default_slo=100)
+    s.add(mk(0, 0, slo=50))
+    s.add(mk(1, 0, slo=10))       # tightest deadline first
+    s.add(mk(2, 0))               # no SLO -> default budget (latest)
+    s.add(mk(3, 5, slo=2))        # later arrival but deadline 7 < 10
+    assert [s.pop_ready(5).uid for _ in range(4)] == [3, 1, 0, 2]
+
+
+def test_deadline_no_slo_low_priority_not_starved():
+    s = DeadlineScheduler(aging_steps=4, default_slo=16)
+    s.add(mk(999, 0, pri=2))      # deadline 0 + 16 + 2*4 = 24
+    for now in range(64):
+        s.add(mk(now, now, slo=20))   # fresh deadline now + 20
+        if s.pop_ready(now).uid == 999:
+            break
+    else:
+        pytest.fail("no-SLO low-priority request starved under EDF")
+
+
+def test_peek_ready_does_not_remove():
+    s = DeadlineScheduler()
+    s.add(mk(0, 0, slo=10))
+    assert s.peek_ready(0).uid == 0
+    assert s.peek_ready(0).uid == 0
+    assert s.pop_ready(0).uid == 0
+    assert s.peek_ready(0) is None
+
+
+# -------------------------------------------------------------------------
+# next_arrival: O(1), exact when it matters
+# -------------------------------------------------------------------------
+
+def test_next_arrival_deep_ready_queue():
+    """The old implementation rescanned every ready entry per idle tick;
+    now a tracked bound answers in O(1).  Semantics: exact whenever
+    nothing is admissible (the only case that moves the clock), and a
+    lower bound <= the clock otherwise (so fast-forward is a no-op)."""
+    s = FifoScheduler(aging_steps=8)
+    for uid in range(5000):
+        s.add(mk(uid, uid % 7))       # all admissible at now=7
+    s._migrate(7)
+    assert len(s._ready) == 5000
+    assert s.next_arrival() <= 7      # bound never moves the clock past now
+    # drain: bound stays a valid lower bound throughout
+    for _ in range(5000):
+        nxt = s.next_arrival()
+        assert nxt is not None and nxt <= 7
+        s.pop_ready(7)
+    assert s.next_arrival() is None
+    # future-only: exact head (this is what idle fast-forward uses)
+    s.add(mk(0, 42))
+    assert s.next_arrival() == 42
+
+
+def test_engine_idle_fast_forward_far_future(sparams):
+    """An idle engine jumps the virtual clock to the next arrival instead
+    of ticking through the gap."""
+    eng = ServeEngine(CFG, sparams, Runtime(),
+                      config=ServeConfig(max_slots=2, max_len=64))
+    eng.submit(mk(0, 10_000, gen=2, plen=4))
+    res = eng.run()
+    assert res[0].admit_vtime >= 10_000
+    assert eng.stats.decode_steps < 20   # no per-step crawl across the gap
+
+
+def test_engine_empty_run(sparams):
+    eng = ServeEngine(CFG, sparams, Runtime(),
+                      config=ServeConfig(max_slots=2, max_len=64))
+    assert eng.run() == {}
+    assert eng.stats.decode_steps == 0
+
+
+def test_bench_summarize_empty_trace(sparams):
+    """bench_serve_engine._summarize must not call np.percentile on an
+    empty array when a trace yields no results."""
+    bench = pytest.importorskip("benchmarks.bench_serve_engine")
+    eng = ServeEngine(CFG, sparams, Runtime(),
+                      config=ServeConfig(max_slots=2, max_len=64))
+    row = bench._summarize(eng, {})
+    assert row["p50"] == 0.0 and row["p95"] == 0.0
+    assert bench._attainment({}) == 0.0
+
+
+# -------------------------------------------------------------------------
+# engine integration: SLO admission + preemption rescue
+# -------------------------------------------------------------------------
+
+def _prompt(rng, n):
+    return np.asarray(rng.integers(0, CFG.vocab, n), np.int32)
+
+
+def test_deadline_admission_beats_fifo_on_burst(sparams):
+    """A tight-SLO request landing behind a burst of loose-SLO work is
+    admitted earlier under deadline scheduling."""
+    rng = np.random.default_rng(0)
+    trace = [Request(uid=i, prompt=_prompt(rng, 12), max_new_tokens=10,
+                     arrival=0, slo_steps=200) for i in range(4)]
+    trace.append(Request(uid=9, prompt=_prompt(rng, 4), max_new_tokens=2,
+                         arrival=1, slo_steps=12))
+    admits = {}
+    for sched in ("fifo", "deadline"):
+        eng = ServeEngine(CFG, sparams, Runtime(),
+                          config=ServeConfig(max_slots=2, max_len=64,
+                                             scheduler=sched))
+        for r in trace:
+            eng.submit(r)
+        admits[sched] = eng.run()[9].admit_vtime
+    assert admits["deadline"] <= admits["fifo"]
+
+
+def test_preemption_rescues_deadline_critical(sparams):
+    """One slot, blocked by a request that already blew its own SLO: with
+    preemption the blocker is truncated (preempted=True, fewer tokens)
+    and the critical request meets its deadline; without preemption it
+    misses."""
+    rng = np.random.default_rng(1)
+    blocker = Request(uid=0, prompt=_prompt(rng, 4), max_new_tokens=40,
+                      arrival=0, slo_steps=5)     # will be over budget fast
+    critical = Request(uid=1, prompt=_prompt(rng, 4), max_new_tokens=2,
+                       arrival=8, slo_steps=10)
+
+    def run(preempt):
+        eng = ServeEngine(CFG, sparams, Runtime(),
+                          config=ServeConfig(max_slots=1, max_len=64,
+                                             scheduler="deadline",
+                                             preemption=preempt))
+        eng.submit(blocker)
+        eng.submit(critical)
+        return eng, eng.run()
+
+    eng_off, res_off = run(False)
+    assert eng_off.stats.preemptions == 0
+    assert not res_off[1].slo_met                  # starved behind blocker
+    assert len(res_off[0].tokens) == 40
+
+    eng_on, res_on = run(True)
+    assert eng_on.stats.preemptions == 1
+    assert res_on[0].preempted and not res_on[0].slo_met
+    assert 0 < len(res_on[0].tokens) < 40          # truncated, not dropped
+    assert res_on[1].slo_met and not res_on[1].preempted
+    assert len(res_on[1].tokens) == 2
+    # the preempted request's tokens are a prefix of its un-preempted run
+    np.testing.assert_array_equal(
+        res_on[0].tokens, res_off[0].tokens[:len(res_on[0].tokens)])
+
+
+def test_preemption_never_touches_requests_within_budget(sparams):
+    """A slot still inside its own SLO budget is not preemptible even when
+    the queue head is critical."""
+    rng = np.random.default_rng(2)
+    eng = ServeEngine(CFG, sparams, Runtime(),
+                      config=ServeConfig(max_slots=1, max_len=64,
+                                         scheduler="deadline",
+                                         preemption=True))
+    eng.submit(Request(uid=0, prompt=_prompt(rng, 4), max_new_tokens=10,
+                       arrival=0, slo_steps=300))   # generous budget
+    eng.submit(Request(uid=1, prompt=_prompt(rng, 4), max_new_tokens=2,
+                       arrival=1, slo_steps=3))     # hopeless deadline
+    res = eng.run()
+    assert eng.stats.preemptions == 0
+    assert not res[0].preempted and len(res[0].tokens) == 10
+
+
+def test_serve_config_validates_scheduler_fields():
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        ServeConfig(scheduler="lifo")
+    with pytest.raises(ValueError, match="aging_steps"):
+        ServeConfig(aging_steps=-1)
+    with pytest.raises(ValueError, match="slo_default_steps"):
+        ServeConfig(slo_default_steps=0)
+    with pytest.raises(ValueError, match="preemption requires"):
+        ServeConfig(preemption=True)   # scheduler defaults to fifo
+    ServeConfig(scheduler="deadline", preemption=True)   # valid
