@@ -45,6 +45,7 @@ MODULES = [
     "bench_table3_gla",
     "bench_fig11_ablation",
     "bench_serve_engine",
+    "bench_sharded",
     "bench_das_fused",
 ]
 

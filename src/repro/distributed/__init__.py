@@ -1,2 +1,5 @@
-"""Distributed runtime: sharding rules, collectives, PP, fault tolerance."""
+"""Distributed runtime: topology/plan API, sharding rules, collectives,
+PP, fault tolerance."""
 from . import collectives, elastic, fault, pipeline, sharding  # noqa: F401
+from . import plan  # noqa: F401  (after sharding: plan builds on its rules)
+from .plan import ShardingPlan, Topology  # noqa: F401

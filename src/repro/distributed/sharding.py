@@ -20,6 +20,7 @@ the scan "stacked" stacks get a leading None for the group axis.
 
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 import jax
@@ -112,19 +113,28 @@ def _leaf_spec(path, leaf) -> P:
     return with_stack((None,) * 4)
 
 
-def param_specs(params: Any) -> Any:
-    """PartitionSpec pytree matching `params` (master or serving format)."""
+def _param_specs(params: Any) -> Any:
     return jax.tree_util.tree_map_with_path(_leaf_spec, params)
 
 
-def zero1_specs(specs: Any, shapes: Any, data_size: int = 16,
-                data_axis: str = "data") -> Any:
-    """ZeRO-1: shard optimizer moments additionally along the data axis.
+def _dtype_bytes(shape) -> int:
+    dt = getattr(shape, "dtype", None)
+    itemsize = getattr(dt, "itemsize", 4) if dt is not None else 4
+    size = 1
+    for d in shape.shape:
+        size *= d
+    return size * itemsize
 
-    Inserts `data_axis` into the first unsharded dimension whose size is
-    divisible by the data-axis extent; leaves the spec alone otherwise
-    (explicit input shardings require exact divisibility).
-    """
+
+def _zero1_specs(specs: Any, shapes: Any, data_size: int = 16,
+                 data_axis: str = "data") -> Any:
+    """ZeRO-1 impl: insert `data_axis` into the first unsharded dimension
+    whose size divides by the data-axis extent.  Leaves with no such dim
+    stay on their param spec (explicit input shardings require exact
+    divisibility) — but that is no longer silent: one summary warning per
+    tree reports how many moment leaves / bytes stay unsharded."""
+    skipped: list[tuple[int, int]] = [0, 0]  # leaves, bytes
+
     def one(spec: P, shape) -> P:
         parts = list(spec)
         parts += [None] * (len(shape.shape) - len(parts))
@@ -133,15 +143,57 @@ def zero1_specs(specs: Any, shapes: Any, data_size: int = 16,
                     and shape.shape[i] > 0:
                 parts[i] = data_axis
                 return P(*parts)
+        skipped[0] += 1
+        skipped[1] += _dtype_bytes(shape)
         return spec
-    return jax.tree.map(one, specs, shapes,
-                        is_leaf=lambda x: isinstance(x, P))
+    out = jax.tree.map(one, specs, shapes,
+                       is_leaf=lambda x: isinstance(x, P))
+    if skipped[0]:
+        warnings.warn(
+            f"zero1_specs: {skipped[0]} moment leaves "
+            f"({skipped[1] / 2**20:.2f} MiB per moment) have no dim "
+            f"divisible by {data_axis}={data_size} and stay unsharded "
+            f"(replicated across the data axis)", stacklevel=3)
+    return out
 
 
-def batch_spec(multi_pod: bool, *, sequence_sharded: bool = False) -> P:
-    """Sharding for (B, S, ...) batches: DP over (pod, data), or SP over
-    data for batch-1 long-context cells."""
+def _batch_spec(multi_pod: bool, *, sequence_sharded: bool = False) -> P:
     dp = ("pod", "data") if multi_pod else ("data",)
     if sequence_sharded:
         return P(None, dp)
     return P(dp)
+
+
+# --------------------------------------------------------------------------
+# deprecated entry points — new code goes through distributed/plan.py
+# --------------------------------------------------------------------------
+
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(old: str, new: str) -> None:
+    if old not in _DEPRECATION_WARNED:   # once per process, not per trace
+        _DEPRECATION_WARNED.add(old)
+        warnings.warn(
+            f"{old} is deprecated; use {new} (distributed/plan.py)",
+            DeprecationWarning, stacklevel=3)
+
+
+def param_specs(params: Any) -> Any:
+    """Deprecated: use ``ShardingPlan.for_config(cfg)`` /
+    ``ShardingPlan.for_tree(params)``."""
+    _warn_deprecated("param_specs", "ShardingPlan.for_tree(params).params")
+    return _param_specs(params)
+
+
+def zero1_specs(specs: Any, shapes: Any, data_size: int = 16,
+                data_axis: str = "data") -> Any:
+    """Deprecated: use ``ShardingPlan.zero1(shapes)``."""
+    _warn_deprecated("zero1_specs", "ShardingPlan.zero1(shapes)")
+    return _zero1_specs(specs, shapes, data_size, data_axis)
+
+
+def batch_spec(multi_pod: bool, *, sequence_sharded: bool = False) -> P:
+    """Deprecated: use ``Topology.batch_spec()``."""
+    _warn_deprecated("batch_spec", "Topology.batch_spec()")
+    return _batch_spec(multi_pod, sequence_sharded=sequence_sharded)

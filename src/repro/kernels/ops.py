@@ -69,6 +69,11 @@ class KernelMode(str, enum.Enum):
     COMPILED = "compiled"
     TUNED = "tuned"
     AUTO = "auto"
+    # GSPMD-safe serving path: reference-style math with slice-free packed
+    # decode, so XLA can shard the contraction over the "model" mesh axis
+    # (see models/ternary_linear._apply_packed_sharded).  Excluded from
+    # kernel_wanted/attn_kernel_wanted — Pallas kernels stay single-device.
+    SHARDED = "sharded"
 
     def __str__(self) -> str:           # str(KernelMode.REF) == "ref" on 3.10+
         return self.value
@@ -97,6 +102,7 @@ _KERNEL_MODE_ALIASES = {
     "interp": "interpret", "emulate": "interpret", "emulated": "interpret",
     "mosaic": "pallas",
     "autotune": "tuned", "autotuned": "tuned",
+    "spmd": "sharded", "gspmd": "sharded",
 }
 
 KERNEL_MODES = tuple(m.value for m in KernelMode)

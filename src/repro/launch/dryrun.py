@@ -36,7 +36,7 @@ from jax.tree_util import DictKey  # noqa: E402
 
 from repro.configs import ARCH_MODULES, get_config  # noqa: E402
 from repro.configs.shapes import SHAPES, shape_by_name  # noqa: E402
-from repro.distributed import sharding  # noqa: E402
+from repro.distributed.plan import ShardingPlan, Topology  # noqa: E402
 from repro.launch.mesh import make_production_mesh, dp_axes_for  # noqa: E402
 from repro.launch.serve import make_decode_step, make_prefill_step  # noqa: E402
 from repro.launch.train import make_runtime, make_train_step, train_shardings  # noqa: E402
@@ -168,6 +168,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, variant: str = "paper",
                                   scan_layers=False)
     shape = shape_by_name(shape_name)
     multi_pod = "pod" in mesh.axis_names
+    topo = Topology.from_mesh(mesh)
     dp = dp_axes_for(mesh, shape.global_batch)
 
     # `variant` is a comma-joined token set (hillclimb knobs):
@@ -234,10 +235,9 @@ def build_cell(arch: str, shape_name: str, mesh, *, variant: str = "paper",
                 return jax.tree_util.tree_map_with_path(
                     one, spec_tree, shapes,
                     is_leaf=lambda x: isinstance(x, P))
-            pspecs = sharding.param_specs(params_shape)
-            p_sh = _dpattn(pspecs, params_shape)
-            z1 = sharding.zero1_specs(sharding.param_specs(opt_shape.m),
-                                      opt_shape.m, mesh.shape["data"])
+            pplan = ShardingPlan.for_tree(params_shape, topo, validate=False)
+            p_sh = _dpattn(pplan.params, params_shape)
+            z1 = pplan.zero1(opt_shape.m)
             o_sh = adamw.AdamWState(
                 step=NamedSharding(mesh, P()),
                 m=_dpattn(z1, opt_shape.m), v=_dpattn(z1, opt_shape.v))
@@ -245,18 +245,17 @@ def build_cell(arch: str, shape_name: str, mesh, *, variant: str = "paper",
                     "labels": NamedSharding(mesh, P(("data",)))}
         if "dp" in tokens:   # pure DP + ZeRO: params replicated, batch wide
             dp_all = tuple(mesh.axis_names)
+            pplan = ShardingPlan.for_tree(params_shape, topo, validate=False)
             repl = jax.tree.map(lambda _: NamedSharding(mesh, P()),
-                                sharding.param_specs(params_shape),
+                                pplan.params,
                                 is_leaf=lambda x: isinstance(x, P))
             # moments: start from replicated (the TP specs may hit dims the
             # model axis doesn't divide, e.g. bitnet's d_ff=5460), then ZeRO
             # over data and model wherever divisible
-            z0 = jax.tree.map(lambda _: P(),
-                              sharding.param_specs(opt_shape.m),
+            z0 = jax.tree.map(lambda _: P(), pplan.params,
                               is_leaf=lambda x: isinstance(x, P))
-            z1 = sharding.zero1_specs(z0, opt_shape.m, mesh.shape["data"])
-            z2 = sharding.zero1_specs(z1, opt_shape.m, mesh.shape["model"],
-                                      data_axis="model")
+            z1 = pplan.zero1(opt_shape.m, base=z0)
+            z2 = pplan.zero1(opt_shape.m, data_axis="model", base=z1)
             o_sh = adamw.AdamWState(
                 step=NamedSharding(mesh, P()),
                 m=jax.tree.map(lambda sp: NamedSharding(mesh, sp), z2,
@@ -286,7 +285,8 @@ def build_cell(arch: str, shape_name: str, mesh, *, variant: str = "paper",
     sparams_shape = jax.eval_shape(
         lambda: MD.export_serving(MD.init_params(jax.random.PRNGKey(0), cfg),
                                   cfg))
-    sp_sh = ns(sharding.param_specs(sparams_shape))
+    sp_plan = ShardingPlan.for_tree(sparams_shape, topo, validate=False)
+    sp_sh = ns(sp_plan.params)
     state_bytes = sum(x.size * x.dtype.itemsize
                       for x in jax.tree.leaves(sparams_shape))
 
@@ -296,7 +296,7 @@ def build_cell(arch: str, shape_name: str, mesh, *, variant: str = "paper",
             # model axis idles (x16 redundant compute) and the batch cannot
             # span 256 ways; kept for completeness (see EXPERIMENTS §Perf).
             sp_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
-                                 sharding.param_specs(sparams_shape),
+                                 sp_plan.params,
                                  is_leaf=lambda x: isinstance(x, P))
             dp = ("data",)
         step = make_prefill_step(cfg, rt, max_len=s + 1)

@@ -1,30 +1,24 @@
-"""Production mesh construction.
+"""Production mesh construction — thin delegates over ``Topology``.
 
 Axes: ("data", "model") single pod (16x16 = 256 chips), ("pod", "data",
-"model") across 2 pods (512 chips).  A FUNCTION, not a module constant, so
+"model") across 2 pods (512 chips).  FUNCTIONS, not module constants, so
 importing this module never touches jax device state (smoke tests must see
 1 device; only launch/dryrun.py forces 512 host devices).
+
+The mesh geometry itself now lives in ``distributed.plan.Topology``
+(``Topology.production().build_mesh()``); these wrappers keep the old call
+sites working and stay the place launch scripts import from.
 """
 
 from __future__ import annotations
 
-import math
-
-import jax
+from repro.distributed.plan import Topology
 
 __all__ = ["make_production_mesh", "mesh_axes", "dp_axes_for"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    need = math.prod(shape)
-    devs = jax.devices()
-    if len(devs) < need:
-        raise RuntimeError(
-            f"mesh {shape} needs {need} devices, have {len(devs)} — run under "
-            f"launch/dryrun.py (XLA_FLAGS=--xla_force_host_platform_device_count=512)")
-    return jax.make_mesh(shape, axes, devices=devs[:need])
+    return Topology.production(multi_pod=multi_pod).build_mesh()
 
 
 def mesh_axes(mesh) -> tuple[str, ...]:
@@ -33,11 +27,4 @@ def mesh_axes(mesh) -> tuple[str, ...]:
 
 def dp_axes_for(mesh, global_batch: int) -> tuple[str, ...]:
     """Data-parallel axes usable for this batch (batch 1 => replicate)."""
-    cand = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-    dp = 1
-    out = []
-    for a in cand:
-        if global_batch % (dp * mesh.shape[a]) == 0:
-            out.append(a)
-            dp *= mesh.shape[a]
-    return tuple(out)
+    return Topology.from_mesh(mesh).dp_axes_for(global_batch)

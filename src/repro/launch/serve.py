@@ -20,16 +20,22 @@ with an OpenAI-style streaming completions endpoint, 429 backpressure,
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced as reduced_cfg
+from repro.distributed.plan import Topology
 from repro.kernels.ops import KernelMode
 from repro.models import model as MD
 from repro.models.transformer import Runtime
 from repro.serve import Request, ServeConfig, ServeEngine
+
+# CLI defaults come straight from the ServeConfig field defaults, so the
+# two can never drift (satellite of the Topology/ShardingPlan redesign)
+_D = {f.name: f.default for f in dataclasses.fields(ServeConfig)}
 
 __all__ = ["make_prefill_step", "make_decode_step", "build_engine", "main"]
 
@@ -69,76 +75,149 @@ def _make_prompt(cfg, rng, length: int):
     return np.asarray(rng.integers(0, cfg.vocab, (length,)), np.int32)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="bitnet-1.3b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--stagger", type=int, default=0,
+def _build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="TENET serving CLI: trace replay or HTTP front door "
+                    "over repro.serve.ServeEngine")
+
+    eng = ap.add_argument_group(
+        "engine", "model + ServeEngine knobs (defaults mirror ServeConfig)")
+    eng.add_argument("--arch", default="bitnet-1.3b")
+    eng.add_argument("--reduced", action="store_true")
+    eng.add_argument("--slots", type=int, default=_D["max_slots"])
+    eng.add_argument("--top-k", type=int, default=_D["top_k"])
+    eng.add_argument("--no-sparse", action="store_true",
+                     help="full attention + full KV cache (naive baseline)")
+    eng.add_argument("--layout", choices=["auto", "paged"],
+                     default=_D["layout"],
+                     help="KV layout: 'auto' keeps per-slot caches; 'paged' "
+                          "shares one refcounted page arena per full-attn "
+                          "layer with lazy allocation + radix prefix sharing")
+    eng.add_argument("--page-size", type=int, default=_D["page_size"],
+                     help="tokens per KV page (paged layout)")
+    eng.add_argument("--num-pages", type=int, default=_D["num_pages"],
+                     help="pool capacity incl. the null page; 0 auto-sizes "
+                          "to the per-slot worst case")
+    eng.add_argument("--no-prefix-sharing", action="store_true",
+                     help="disable the radix-trie prompt-prefix index "
+                          "(paged layout)")
+    eng.add_argument("--kernel-mode", default="ref",
+                     type=lambda s: KernelMode.parse(s).value,
+                     help="ternary-linear execution path (kernels/ops."
+                          "KERNEL_MODES); kernel modes route slab-aligned "
+                          "packed+DAS layers through the fused "
+                          "das_ternary_gemm datapath; 'tuned' autotunes "
+                          "per-shape at engine construction and caches "
+                          "winners on disk; 'sharded' is the GSPMD-safe "
+                          "path a --tp/--dp mesh forces")
+    eng.add_argument("--moe-expert-capacity", type=int,
+                     default=_D["moe_expert_capacity"],
+                     help="bound the per-expert token load per decode tick "
+                          "by deferring admissions (MoE configs only; 0 = "
+                          "unbounded — decode itself never drops tokens)")
+    eng.add_argument("--seed", type=int, default=_D["seed"])
+
+    tr = ap.add_argument_group("trace replay", "synthetic request trace")
+    tr.add_argument("--requests", type=int, default=4)
+    tr.add_argument("--prompt-len", type=int, default=64)
+    tr.add_argument("--gen", type=int, default=32)
+    tr.add_argument("--stagger", type=int, default=0,
                     help="virtual decode steps between request arrivals")
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--top-k", type=int, default=0)
-    ap.add_argument("--policy", choices=["continuous", "wave"],
-                    default="continuous")
-    ap.add_argument("--no-sparse", action="store_true",
-                    help="full attention + full KV cache (naive baseline)")
-    ap.add_argument("--layout", choices=["auto", "paged"], default="auto",
-                    help="KV layout: 'auto' keeps per-slot caches; 'paged' "
-                         "shares one refcounted page arena per full-attn "
-                         "layer with lazy allocation + radix prefix sharing")
-    ap.add_argument("--page-size", type=int, default=16,
-                    help="tokens per KV page (paged layout)")
-    ap.add_argument("--num-pages", type=int, default=0,
-                    help="pool capacity incl. the null page; 0 auto-sizes "
-                         "to the per-slot worst case")
-    ap.add_argument("--no-prefix-sharing", action="store_true",
-                    help="disable the radix-trie prompt-prefix index "
-                         "(paged layout)")
-    ap.add_argument("--kernel-mode", default="ref",
-                    type=lambda s: KernelMode.parse(s).value,
-                    help="ternary-linear execution path (kernels/ops."
-                         "KERNEL_MODES); kernel modes route slab-aligned "
-                         "packed+DAS layers through the fused "
-                         "das_ternary_gemm datapath; 'tuned' autotunes "
-                         "per-shape at engine construction and caches "
-                         "winners on disk (see kernels/autotune.py)")
-    ap.add_argument("--moe-expert-capacity", type=int, default=0,
-                    help="bound the per-expert token load per decode tick "
-                         "by deferring admissions (MoE configs only; 0 = "
-                         "unbounded — decode itself never drops tokens)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--scheduler", choices=["fifo", "deadline"], default=None,
-                    help="admission order: 'fifo' (aged priority-then-"
-                         "arrival) or 'deadline' (earliest-effective-"
-                         "deadline-first over Request.slo_steps); defaults "
-                         "to 'deadline' under --serve-http, else 'fifo'")
-    ap.add_argument("--slo-steps", type=int, default=0,
-                    help="per-request deadline budget in virtual decode "
-                         "steps (0 = no SLO); attached to every trace "
-                         "request and used as the server's default for "
-                         "requests that don't carry slo_steps")
-    ap.add_argument("--preemption", action="store_true",
-                    help="deadline scheduler only: truncate-and-retire the "
-                         "youngest over-SLO-budget slot when the queue head "
-                         "would otherwise miss its deadline")
-    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+    tr.add_argument("--temperature", type=float, default=0.0)
+    tr.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="append JSON-lines telemetry (one line per "
                          "finished request + periodic tick snapshots) to "
                          "PATH")
-    ap.add_argument("--serve-http", action="store_true",
-                    help="run the always-on HTTP front door instead of a "
-                         "trace replay (POST /v1/completions with "
-                         "stream=true, GET /metrics, GET /healthz; "
-                         "SIGINT/SIGTERM shut down cleanly)")
-    ap.add_argument("--host", default="127.0.0.1")
-    ap.add_argument("--port", type=int, default=8080,
-                    help="listen port for --serve-http (0 = ephemeral)")
-    ap.add_argument("--max-queue-depth", type=int, default=64,
-                    help="queued requests beyond which the server answers "
-                         "429 (backpressure)")
+
+    sched = ap.add_argument_group("scheduler", "admission order + SLOs")
+    sched.add_argument("--policy", choices=["continuous", "wave"],
+                       default=_D["policy"])
+    sched.add_argument("--scheduler", choices=["fifo", "deadline"],
+                       default=None,
+                       help="admission order: 'fifo' (aged priority-then-"
+                            "arrival) or 'deadline' (earliest-effective-"
+                            "deadline-first over Request.slo_steps); "
+                            "defaults to 'deadline' under --serve-http, "
+                            "else 'fifo'")
+    sched.add_argument("--slo-steps", type=int, default=0,
+                       help="per-request deadline budget in virtual decode "
+                            "steps (0 = no SLO); attached to every trace "
+                            "request and used as the server's default for "
+                            "requests that don't carry slo_steps")
+    sched.add_argument("--preemption", action="store_true",
+                       help="deadline scheduler only: truncate-and-retire "
+                            "the youngest over-SLO-budget slot when the "
+                            "queue head would otherwise miss its deadline")
+
+    http = ap.add_argument_group("HTTP front door", "--serve-http mode")
+    http.add_argument("--serve-http", action="store_true",
+                      help="run the always-on HTTP front door instead of a "
+                           "trace replay (POST /v1/completions with "
+                           "stream=true, GET /metrics, GET /healthz; "
+                           "SIGINT/SIGTERM shut down cleanly)")
+    http.add_argument("--host", default="127.0.0.1")
+    http.add_argument("--port", type=int, default=8080,
+                      help="listen port for --serve-http (0 = ephemeral)")
+    http.add_argument("--max-queue-depth", type=int, default=64,
+                      help="queued requests beyond which the server answers "
+                           "429 (backpressure)")
+
+    dist = ap.add_argument_group(
+        "distributed", "SPMD serving over a (dp, tp) mesh + elastic "
+        "recovery (run under XLA_FLAGS="
+        "--xla_force_host_platform_device_count=N to emulate N devices)")
+    dist.add_argument("--tp", type=int, default=None, metavar="N",
+                      help="tensor-parallel ways: shard the packed weight "
+                           "slabs Megatron column/row style over the "
+                           "'model' mesh axis")
+    dist.add_argument("--dp", type=int, default=None, metavar="N",
+                      help="data-parallel ways: shard the slot batch over "
+                           "the 'data' mesh axis")
+    dist.add_argument("--print-plan", action="store_true",
+                      help="print the resolved ShardingPlan (per-leaf "
+                           "PartitionSpecs) and the cache specs")
+    dist.add_argument("--inject-failure", type=int, action="append",
+                      default=None, metavar="STEP",
+                      help="inject a WorkerFailure before decode step STEP "
+                           "(repeatable): exercises snapshot -> mesh "
+                           "shrink -> reshard -> replay recovery")
+    dist.add_argument("--inject-lost", type=int, default=1, metavar="N",
+                      help="devices lost per injected failure (default 1)")
+    return ap
+
+
+def _check_topology(ap, cfg, args) -> Topology | None:
+    """Resolve --tp/--dp into a Topology, rejecting shapes the config's
+    head/FFN dims can't divide with a clear argparse error."""
+    if args.tp is None and args.dp is None:
+        return None     # single-device; --inject-failure still works
+                        # (in-place recovery: snapshot + rebuild + replay)
+    tp = args.tp or 1
+    dp = args.dp or 1
+    if tp < 1 or dp < 1:
+        ap.error("--tp/--dp must be >= 1")
+    if tp > 1:
+        bad = [f"{name}={dim}" for name, dim in (
+            ("n_heads", cfg.n_heads), ("n_kv_heads", cfg.n_kv_heads),
+            ("d_ff", cfg.d_ff)) if dim % tp]
+        if cfg.moe is not None and cfg.moe.n_experts % tp:
+            bad.append(f"moe.n_experts={cfg.moe.n_experts}")
+        if bad:
+            ap.error(f"--tp {tp} does not divide {args.arch}'s "
+                     f"{', '.join(bad)}; pick a tp that divides the "
+                     f"head/FFN dims (try --reduced, or a smaller --tp)")
+    topo = Topology(dp=dp, tp=tp)
+    n_dev = len(jax.devices())
+    if topo.n_devices > n_dev:
+        ap.error(f"topology (dp={dp}, tp={tp}) needs {topo.n_devices} "
+                 f"devices but jax sees {n_dev}; relaunch with XLA_FLAGS="
+                 f"--xla_force_host_platform_device_count={topo.n_devices} "
+                 f"(set before jax initializes)")
+    return topo
+
+
+def main(argv=None):
+    ap = _build_parser()
     args = ap.parse_args(argv)
     if args.scheduler is None:
         args.scheduler = "deadline" if args.serve_http else "fifo"
@@ -153,6 +232,7 @@ def main(argv=None):
         ap.error(str(e.args[0] if e.args else e))
     if args.reduced:
         cfg = reduced_cfg(cfg)
+    topology = _check_topology(ap, cfg, args)
     rt = Runtime(serve_sparse=not args.no_sparse,
                  kernel_mode=args.kernel_mode)
     max_len = args.prompt_len + args.gen
@@ -168,10 +248,22 @@ def main(argv=None):
                          policy=args.policy,
                          moe_expert_capacity=args.moe_expert_capacity,
                          scheduler=args.scheduler,
-                         preemption=args.preemption)
+                         preemption=args.preemption,
+                         topology=topology)
         eng = build_engine(cfg, rt, config=sc)
     except ValueError as e:
         ap.error(f"config not serveable: {e}")
+    if args.inject_failure:
+        from repro.distributed import fault
+        eng.fault_injector = fault.FaultInjector(
+            fail_at=tuple(sorted(set(args.inject_failure))))
+        eng.fault_lost_devices = args.inject_lost
+    if topology is not None:
+        print(f"[serve] topology: dp={topology.dp} tp={topology.tp} "
+              f"({topology.n_devices} devices, mesh axes "
+              f"{topology.axis_names})")
+    if args.print_plan and eng.plan is not None:
+        print(eng.plan.describe(eng.sparams))
 
     # the resolved slot-state union (one entry per distinct layout, in
     # stack order) — the README's "serving the model zoo" table, live
@@ -222,6 +314,17 @@ def main(argv=None):
         print(f"[serve] req {uid}: ttft {r.ttft_steps} steps, latency "
               f"{r.latency_steps} steps{slo_note}, "
               f"ids {r.tokens[:8].tolist()}...")
+    if st.reshards:
+        t = eng.topology
+        topo_note = "" if t is None else f", topology dp={t.dp} tp={t.tp}"
+        if len(results) == args.requests:
+            print(f"[serve] recovery clean: all {len(results)} in-flight "
+                  f"requests completed (reshards={st.reshards}, recovery "
+                  f"{st.recovery_seconds:.2f}s{topo_note})")
+        else:
+            print(f"[serve] recovery INCOMPLETE: {len(results)}/"
+                  f"{args.requests} requests completed after "
+                  f"{st.reshards} reshard(s){topo_note}")
     if args.slo_steps > 0:
         tracked = [r for r in results.values() if r.slo_steps is not None]
         met = sum(r.slo_met for r in tracked)

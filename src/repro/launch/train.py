@@ -20,7 +20,8 @@ import numpy as np
 
 from repro.configs import get_config, reduced as reduced_cfg
 from repro.data.pipeline import SyntheticLM
-from repro.distributed import fault, sharding
+from repro.distributed import fault
+from repro.distributed.plan import ShardingPlan, Topology
 from repro.models import model as MD
 from repro.models.transformer import Runtime
 from repro.optim import adamw, schedule
@@ -59,20 +60,16 @@ def make_train_step(cfg, rt: Runtime, *, peak_lr=3e-4, warmup=100,
 def train_shardings(mesh, params_shape, opt_shape, *, multi_pod: bool):
     """NamedShardings for (params, opt, batch) of a train step."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    pspecs = sharding.param_specs(params_shape)
-    dsz = mesh.shape["data"]
-    ospecs = adamw.AdamWState(
-        step=P(),
-        m=sharding.zero1_specs(sharding.param_specs(opt_shape.m),
-                               opt_shape.m, dsz),
-        v=sharding.zero1_specs(sharding.param_specs(opt_shape.v),
-                               opt_shape.v, dsz))
-    dp = ("pod", "data") if multi_pod else ("data",)
-    bspec = {"inputs": P(dp), "labels": P(dp)}
+    plan = ShardingPlan.for_tree(params_shape, Topology.from_mesh(mesh),
+                                 validate=False)
+    ospecs = adamw.AdamWState(step=P(),
+                              m=plan.zero1(opt_shape.m),
+                              v=plan.zero1(opt_shape.v))
+    bspec = {"inputs": plan.batch, "labels": plan.batch}
     ns = lambda tree: jax.tree.map(  # noqa: E731
         lambda s: NamedSharding(mesh, s), tree,
         is_leaf=lambda x: isinstance(x, P))
-    return ns(pspecs), ns(ospecs), ns(bspec)
+    return ns(plan.params), ns(ospecs), ns(bspec)
 
 
 # ---------------------------------------------------------------------------

@@ -147,6 +147,39 @@ def _apply_packed_tuned(p: dict, x2: jax.Array, tc: TernaryConfig,
         scale, keep=tc.das.keep, block=tc.das.block, cfg=cfg)
 
 
+def _unpack5(packed: jax.Array) -> jax.Array:
+    """Slice-free base-3 decode: (Kp, N) u8 -> (5*Kp, N) i8 trits.
+
+    ``twd.unpack_ternary_arith`` ends with a ``flat[:k]`` slice to drop the
+    pack padding, which forces GSPMD to gather a K-sharded slab before
+    slicing.  The sharded path instead decodes the *full* padded slab —
+    padding bytes decode to 0-trits, so zero-padding the activations to
+    5*Kp (see `_apply_packed_sharded`) makes the padded contraction exact.
+    Pure reshape/arithmetic, so a "model"-sharded dim stays sharded.
+    """
+    digits = [(packed // jnp.uint8(3 ** i)) % 3 for i in range(twd.TRITS_PER_BYTE)]
+    stacked = jnp.stack(digits, axis=1)            # (Kp, 5, N)
+    flat = stacked.reshape(-1, packed.shape[-1])   # (5*Kp, N)
+    return flat.astype(jnp.int8) - 1
+
+
+def _apply_packed_sharded(p: dict, x2: jax.Array,
+                          tc: TernaryConfig) -> jax.Array:
+    """GSPMD-friendly packed matmul for the "sharded" kernel mode.
+
+    Column-parallel layers shard N ("model" on packed dim 1) with no
+    communication; row-parallel layers shard packed K (dim 0), and the
+    zero-padded contraction below reduces with exactly one all-reduce —
+    the Megatron one-collective-per-block-half pattern.  No Pallas, no
+    dynamic slicing: every op here propagates a NamedSharding.
+    """
+    k = x2.shape[-1]
+    xs = _das_maybe(x2, tc).astype(jnp.float32)
+    w = _unpack5(p["packed"]).astype(jnp.float32)  # (5*Kp, N), zeros past k
+    xp = jnp.pad(xs, ((0, 0), (0, w.shape[0] - k)))
+    return (xp @ w) * p["scale"]
+
+
 def _apply_packed(p: dict, x: jax.Array, tc: TernaryConfig,
                   kernel_mode: str, ca) -> jax.Array:
     """Serving matmul against base-3 packed weights (see module docstring)."""
@@ -154,7 +187,9 @@ def _apply_packed(p: dict, x: jax.Array, tc: TernaryConfig,
     lead = x.shape[:-1]
     scale = p["scale"]
     kp = p["packed"].shape[0]
-    if kernel_mode == "tuned":
+    if kernel_mode == "sharded":
+        y = _apply_packed_sharded(p, x.reshape(-1, k), tc)
+    elif kernel_mode == "tuned":
         y = _apply_packed_tuned(p, x.reshape(-1, k), tc, ca)
     elif ops.kernel_wanted(kernel_mode) and ops.fused_das_ok(k, kp, tc.das):
         # fused path: compacted activations straight into the kernel

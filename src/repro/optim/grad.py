@@ -48,8 +48,12 @@ def compressed_crosspod_mean(grads: Any, error: Any, mesh,
 
     grads must be per-pod partial means (batch sharded per pod, loss averaged
     within pod).  Leaves are exchanged compressed; error feedback carries the
-    quantization residual to the next step.
+    quantization residual to the next step.  ``mesh`` may be a jax Mesh or a
+    ``distributed.plan.Topology`` (built into a mesh here).
     """
+    from repro.distributed.plan import Topology
+    if isinstance(mesh, Topology):
+        mesh = mesh.build_mesh()
     n_pods = mesh.shape[pod_axis]
 
     def local(g, e):

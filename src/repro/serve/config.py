@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 
+from repro.distributed.plan import Topology
 from repro.kernels.ops import KernelMode
 
 __all__ = ["ServeConfig"]
@@ -72,8 +73,17 @@ class ServeConfig:
     aging_steps: int = 64
     slo_default_steps: int = 256
     preemption: bool = False
+    # SPMD serving: a Topology makes the engine build a mesh, resolve a
+    # ShardingPlan for params + caches, and jit the decode step with
+    # explicit in/out shardings (kernel mode is forced to "sharded", the
+    # GSPMD-safe path).  None = single-device, exactly as before.
+    topology: Topology | None = None
 
     def __post_init__(self):
+        if self.topology is not None and not isinstance(self.topology,
+                                                        Topology):
+            raise ValueError(f"topology must be a distributed.plan.Topology "
+                             f"or None, got {type(self.topology).__name__}")
         if self.max_slots < 1:
             raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
         if self.max_len < 1:

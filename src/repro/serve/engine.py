@@ -61,8 +61,12 @@ from dataclasses import dataclass, field, replace
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.distributed import fault
+from repro.distributed.plan import ShardingPlan
 from repro.kernels import ops
 from repro.models import attention as A
 from repro.models import kvcache as KV
@@ -138,6 +142,9 @@ class EngineStats:
                                      # request waited for a slot to retire)
     preemptions: int = 0          # over-budget slots truncated to rescue a
                                   # deadline-critical queued request
+    # elastic recovery (zero unless a WorkerFailure was survived)
+    reshards: int = 0             # snapshot -> mesh shrink -> reshard cycles
+    recovery_seconds: float = 0.0  # wall time spent rebuilding device state
 
     @property
     def slot_utilization(self) -> float:
@@ -203,6 +210,13 @@ class ServeEngine:
         else:
             rt = replace(rt,
                          kernel_mode=ops.KernelMode.parse(rt.kernel_mode).value)
+        if config.topology is not None and rt.kernel_mode != "sharded":
+            if rt.kernel_mode != "ref":
+                warnings.warn(
+                    f"kernel_mode={rt.kernel_mode!r} is a single-device "
+                    f"path; a Topology forces the GSPMD-safe 'sharded' mode",
+                    stacklevel=2)
+            rt = replace(rt, kernel_mode="sharded")
         self.cfg, self.sparams, self.rt = cfg, sparams, rt
         self.config = config
         max_slots, max_len = config.max_slots, config.max_len
@@ -254,6 +268,56 @@ class ServeEngine:
         self._pages_per_seq = config.pages_per_seq if self._has_full else 0
         page_size = self._page_size if self._pages_per_seq else 0
         num_pages = config.resolved_num_pages() if self._pages_per_seq else 0
+        self._cache_page_size = page_size
+        self._cache_num_pages = num_pages
+        # explicit per-layer CacheSpec union: the engine's source of truth
+        # for which layers are shared page arenas vs per-slot rows (ring /
+        # full / recurrent).  Mirrors the cache pytree structure.
+        self._layer_specs = self._build_layer_specs(page_size, num_pages)
+        self._paged_stacked = tuple(
+            s.layout == "paged" for s in (self._layer_specs["stacked"] or ()))
+        self._paged_tail = tuple(
+            s.layout == "paged" for s in self._layer_specs["tail"])
+        self._rest_is_empty = self._paged and not self._has_non_paged_rows()
+        if config.moe_expert_capacity and cfg.moe is None:
+            raise ValueError(
+                f"moe_expert_capacity={config.moe_expert_capacity} is set "
+                f"but config {cfg.name!r} has no MoE layers; drop the bound "
+                f"or serve a MoE config")
+        self._moe_slot_cap = (config.moe_expert_capacity
+                              if cfg.moe is not None else 0)
+        self._slots = [_Slot() for _ in range(max_slots)]
+        self._results: dict[int, RequestResult] = {}
+        self._pending_uids: set[int] = set()
+        self._base_key = jax.random.PRNGKey(config.seed)
+        self._sampler = make_sampler(config.top_k)
+        self._top_k = config.top_k
+
+        # ---- SPMD / elastic-recovery state ------------------------------
+        self._topology = config.topology   # live: shrinks on recovery
+        self._mesh = None
+        self.plan: ShardingPlan | None = None
+        self._replays: list[dict] = []     # slot snapshots awaiting re-admit
+        # test/ops hook: a fault.FaultInjector checked at each tick top;
+        # fault_lost_devices is how many devices a triggered failure costs
+        self.fault_injector = None
+        self.fault_lost_devices = 1
+
+        if rt.kernel_mode == "tuned":
+            self._autotune_warmup()   # eager: must precede any jit trace
+
+        self._build_device_state()
+
+    def _build_device_state(self) -> None:
+        """(Re)build everything that lives on devices: the KV pool / radix
+        index / page table, the cache pytrees, the mesh + ShardingPlan
+        placement of params and caches, and every jitted step.  Called once
+        at construction and again by `recover()` after a device loss — the
+        jits retrace against the (possibly shrunk) mesh."""
+        cfg, rt = self.cfg, self.rt
+        max_slots, max_len = self.max_slots, self.max_len
+        page_size, num_pages = self._cache_page_size, self._cache_num_pages
+
         self._pool = PagePool(num_pages, self._page_size) \
             if self._pages_per_seq else None
         self._radix = RadixIndex() if self._share else None
@@ -265,52 +329,55 @@ class ServeEngine:
                                      num_pages=num_pages)
         self._empty1 = MD.init_caches(None, cfg, 1, max_len, rt,
                                       self._cache_dtype)
-        # explicit per-layer CacheSpec union: the engine's source of truth
-        # for which layers are shared page arenas vs per-slot rows (ring /
-        # full / recurrent).  Mirrors the cache pytree structure.
-        self._layer_specs = self._build_layer_specs(page_size, num_pages)
-        self._paged_stacked = tuple(
-            s.layout == "paged" for s in (self._layer_specs["stacked"] or ()))
-        self._paged_tail = tuple(
-            s.layout == "paged" for s in self._layer_specs["tail"])
         # spec-derived flags must agree with the allocated structure
         assert self._paged_stacked == tuple(
             KV.is_paged(c) for c in (self.caches["stacked"] or ()))
         assert self._paged_tail == tuple(
             KV.is_paged(c) for c in self.caches["tail"])
-        self._rest_is_empty = self._paged and not self._has_non_paged_rows()
-        if config.moe_expert_capacity and cfg.moe is None:
-            raise ValueError(
-                f"moe_expert_capacity={config.moe_expert_capacity} is set "
-                f"but config {cfg.name!r} has no MoE layers; drop the bound "
-                f"or serve a MoE config")
-        self._moe_slot_cap = (config.moe_expert_capacity
-                              if cfg.moe is not None else 0)
         self._page_bytes = self._compute_page_bytes()
-        self._slots = [_Slot() for _ in range(max_slots)]
-        self._results: dict[int, RequestResult] = {}
-        self._pending_uids: set[int] = set()
-        self._base_key = jax.random.PRNGKey(config.seed)
-        self._sampler = make_sampler(config.top_k)
-        self._top_k = config.top_k
 
-        if rt.kernel_mode == "tuned":
-            self._autotune_warmup()   # eager: must precede any jit trace
+        step_kw: dict = {}
+        cache_kw: dict = {}
+        if self._topology is not None:
+            self._mesh = self._topology.build_mesh()
+            plan = ShardingPlan.for_tree(self.sparams, self._topology)
+            plan = plan.with_caches(self.caches, batch=max_slots)
+            self.plan = plan
+            psh = plan.named(self._mesh)
+            csh = plan.cache_named(self._mesh)
+            rep = NamedSharding(self._mesh, P())
+            # commit params/caches to the mesh once; on recovery this is
+            # the reshard (old-mesh arrays redistribute onto the survivors)
+            self.sparams = jax.device_put(self.sparams, psh)
+            self.caches = jax.device_put(self.caches, csh)
+            self._empty1 = jax.device_put(
+                self._empty1, jax.tree.map(lambda _: rep, self._empty1))
+            # explicit in/out shardings on the decode step: params keep the
+            # Megatron column/row placement (one all-reduce per block half),
+            # caches stay put so donation round-trips without resharding
+            step_kw = {"in_shardings": ((psh, csh,
+                                         rep if self._paged else None)
+                                        + (rep,) * 8),
+                       "out_shardings": (rep, csh)}
+            cache_kw = {"out_shardings": csh}
 
         self._prefill = jax.jit(
             lambda sp, x: MD.prefill(sp, cfg, x, rt, max_len=max_len))
-        self._step = jax.jit(self._step_fn, donate_argnums=(1,))
-        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,))
+        self._step = jax.jit(self._step_fn, donate_argnums=(1,), **step_kw)
+        self._insert = jax.jit(self._insert_fn, donate_argnums=(0,),
+                               **cache_kw)
         self._insert_paged = jax.jit(self._insert_paged_fn,
-                                     donate_argnums=(0,))
+                                     donate_argnums=(0,), **cache_kw)
         self._insert_shared = jax.jit(self._insert_shared_fn,
-                                      donate_argnums=(0,))
-        self._copy_page = jax.jit(self._copy_page_fn, donate_argnums=(0,))
-        self._scrub = jax.jit(self._scrub_fn, donate_argnums=(0,))
-        self._scrub_slot = jax.jit(self._scrub_slot_fn, donate_argnums=(0,))
+                                      donate_argnums=(0,), **cache_kw)
+        self._copy_page = jax.jit(self._copy_page_fn, donate_argnums=(0,),
+                                  **cache_kw)
+        self._scrub = jax.jit(self._scrub_fn, donate_argnums=(0,), **cache_kw)
+        self._scrub_slot = jax.jit(self._scrub_slot_fn, donate_argnums=(0,),
+                                   **cache_kw)
         self._sample1 = jax.jit(
-            lambda lg, uid, temp: sample_token(
-                lg, self._fold_key(uid, jnp.int32(0)), temp, config.top_k))
+            lambda lg, uid, ctr, temp: sample_token(
+                lg, self._fold_key(uid, ctr), temp, self._top_k))
 
     # -- layer-layout structure helpers -----------------------------------
 
@@ -637,6 +704,7 @@ class ServeEngine:
             # draws); a finished-but-unclaimed result would be clobbered —
             # pop_result/drain_results release the uid for reuse
             in_flight = {s.req.uid for s in self._slots if s.req is not None}
+            in_flight |= {snap["req"].uid for snap in self._replays}
             if req.uid in in_flight or req.uid in self._pending_uids:
                 raise ValueError(f"request uid {req.uid} already in flight")
             if req.uid in self._results:
@@ -682,7 +750,7 @@ class ServeEngine:
         """Zero the virtual clock and stats between traces (caches and jit
         compilation caches survive — use to warm up before a timed replay).
         Only valid when the engine is drained."""
-        if self.num_active or self.scheduler:
+        if self.num_active or self.scheduler or self._replays:
             raise RuntimeError("reset_clock on a non-drained engine")
         self.vtime = 0
         self.stats = EngineStats(
@@ -705,15 +773,20 @@ class ServeEngine:
     def run(self) -> dict[int, RequestResult]:
         """Drain the queue; returns uid -> RequestResult."""
         t0 = time.perf_counter()
-        while self.scheduler or self.num_active:
+        while self.scheduler or self.num_active or self._replays:
             self._admit_ready()
             if not self.num_active:
+                if self._replays:
+                    continue      # deferred replay admission: retry
                 nxt = self.scheduler.next_arrival()
                 if nxt is None:   # nothing queued, nothing active
                     break
                 self.vtime = max(self.vtime, nxt)   # idle fast-forward
                 continue
-            self.step_decode()
+            try:
+                self.step_decode()
+            except fault.WorkerFailure:
+                self.recover()
         self.stats.wall_seconds += time.perf_counter() - t0
         # surface THIS engine's silent jnp-reference fallbacks (deltas vs
         # the per-engine baseline; a populated dict under a kernel mode
@@ -752,8 +825,13 @@ class ServeEngine:
                     poll()
                 self._admit_ready()
                 if self.num_active:
-                    self.step_decode()
+                    try:
+                        self.step_decode()
+                    except fault.WorkerFailure:
+                        self.recover()
                     continue
+                if self._replays:
+                    continue      # deferred replay admission: retry
                 nxt = self.scheduler.next_arrival()
                 if nxt is not None:
                     if nxt > self.vtime:
@@ -766,6 +844,54 @@ class ServeEngine:
         finally:
             self.stats.wall_seconds += time.perf_counter() - t0
             self.stats.kernel_fallbacks = self.kernel_fallback_deltas()
+
+    # -- elastic recovery --------------------------------------------------
+
+    @property
+    def topology(self):
+        """The live Topology (None single-device); shrinks on recovery."""
+        return self._topology
+
+    def recover(self, lost_devices: int | None = None) -> None:
+        """Survive a device/host loss mid-serving: snapshot every active
+        slot (request + tokens generated so far), shrink the topology by
+        ``lost_devices`` (default ``fault_lost_devices``; tp is preserved
+        while it divides the survivor count, per elastic.plan_remesh),
+        rebuild mesh/plan/caches/jits, and queue the snapshots for replay
+        admission — in-flight requests resume from their last token, never
+        dropped.  Single-device engines rebuild in place (lost capacity 0).
+        """
+        t0 = time.perf_counter()
+        with self._lock:
+            snaps = []
+            for s in self._slots:
+                if s.state == FREE:
+                    continue
+                snaps.append({
+                    "req": s.req, "out": list(s.out),
+                    "admit_vtime": s.admit_vtime,
+                    # no first token yet -> let replay stamp it on emission
+                    "first_tok_vtime": s.first_tok_vtime if s.out else None,
+                    "admitted_with_active": s.admitted_with_active})
+                s.state = FREE
+                s.req = None
+                s.input_x = None
+                s.tail = None
+                s.pages = None
+                s.page_budget = 0
+            lost = (self.fault_lost_devices if lost_devices is None
+                    else lost_devices)
+            if self._topology is not None and lost > 0:
+                self._topology = self._topology.shrink(
+                    self._topology.n_devices - lost)
+            self._build_device_state()
+            self._replays.extend(snaps)
+            self.stats.reshards += 1
+            dt = time.perf_counter() - t0
+            self.stats.recovery_seconds += dt
+        if self.telemetry is not None:
+            self.telemetry.on_reshard(self, lost=lost, seconds=dt,
+                                      in_flight=len(snaps))
 
     # -- admission --------------------------------------------------------
 
@@ -805,6 +931,16 @@ class ServeEngine:
             self._retire(victim, preempted=True)
 
     def _admit_ready_locked(self) -> None:
+        # recovery replays outrank fresh admissions: these requests were
+        # already mid-stream when the failure hit and must never be dropped
+        while self._replays:
+            idx = next((i for i, s in enumerate(self._slots)
+                        if s.state == FREE), None)
+            if idx is None:
+                break
+            if not self._replay_admit(idx, self._replays[0]):
+                break   # pool too tight right now: retry next tick
+            self._replays.pop(0)
         if self.policy == "wave" and self.num_active:
             return
         if self._preempt:
@@ -850,6 +986,7 @@ class ServeEngine:
         slot.admit_vtime = self.vtime
         slot.out = []
         slot.input_x = None
+        slot.first_tok_vtime = None
         if self._paged:
             ok = self._admit_paged(idx, slot, req, prefix)
             if not ok:
@@ -858,8 +995,36 @@ class ServeEngine:
         self._admit_dense(idx, slot, req, prefix)
         return True
 
+    def _replay_admit(self, idx: int, snap: dict) -> bool:
+        """Re-admit a snapshot taken by `recover()`: prefill the original
+        prompt prefix, then force-feed prompt tail + already-generated
+        tokens, so the slot's caches and sampling counters land exactly
+        where they were — in-flight requests resume, never restart."""
+        slot = self._slots[idx]
+        req = snap["req"]
+        prefix = (req.prompt_len // self._chunk) * self._chunk
+        slot.admitted_with_active = snap["admitted_with_active"]
+        slot.req = req
+        slot.admit_vtime = snap["admit_vtime"]
+        slot.out = list(snap["out"])
+        slot.input_x = None
+        slot.first_tok_vtime = None
+        replay = tuple(snap["out"])
+        if self._paged:
+            if not self._admit_paged(idx, slot, req, prefix,
+                                     replay=replay, notify=False):
+                slot.req = None     # back off: slot stays FREE
+                return False
+        else:
+            self._admit_dense(idx, slot, req, prefix,
+                              replay=replay, notify=False)
+        if snap["first_tok_vtime"] is not None:
+            slot.first_tok_vtime = snap["first_tok_vtime"]
+        return True
+
     def _admit_dense(self, idx: int, slot: _Slot, req: Request,
-                     prefix: int) -> None:
+                     prefix: int, replay: tuple = (),
+                     notify: bool = True) -> None:
         p = req.prompt_len
         if prefix > 0:
             logits, small = self._prefill(self.sparams,
@@ -869,21 +1034,41 @@ class ServeEngine:
             logits, small = None, self._empty1
         self.caches = self._insert(self.caches, small, jnp.int32(idx))
         self._start_slot(idx, slot, req, prefix,
-                         logits[0] if logits is not None else None)
+                         logits[0] if logits is not None else None,
+                         replay=replay, notify=notify)
+
+    def _feed(self, slot: _Slot, nxt) -> None:
+        """Route one tail element into the decode step's input: raw
+        embedding rows through forced_x, token ids through input_tok (a
+        replayed tail mixes both for stub-frontend models — prompt rows are
+        vectors, previously generated tokens are ids)."""
+        if self._uses_embeds and np.ndim(nxt) > 0:
+            slot.input_tok = 0
+            slot.input_x = np.asarray(nxt, np.float32)
+        else:
+            slot.input_tok = int(nxt)
+            slot.input_x = None
 
     def _start_slot(self, idx: int, slot: _Slot, req: Request,
-                    absorbed: int, logits) -> None:
+                    absorbed: int, logits, replay: tuple = (),
+                    notify: bool = True) -> None:
         """Common tail of admission: first token from prefill/stored logits
         when the whole prompt is absorbed, else token-by-token tail feed
-        from position ``absorbed``."""
+        from position ``absorbed``.  ``replay`` (elastic recovery) appends
+        already-generated tokens to the tail so the slot re-derives its
+        exact pre-failure state through the same forced-feed machinery —
+        sampling resumes at counter len(out), bitwise-continuing the
+        original stream."""
         p = req.prompt_len
-        if self.telemetry is not None:
+        if notify and self.telemetry is not None:
             self.telemetry.on_admit(req, self.vtime)
-        if absorbed == p:
+        if absorbed == p and not replay:
             tok = int(self._sample1(jnp.asarray(logits), jnp.int32(req.uid),
+                                    jnp.int32(len(slot.out)),
                                     jnp.float32(req.temperature)))
             slot.state = DECODE
-            slot.first_tok_vtime = self.vtime
+            if slot.first_tok_vtime is None:
+                slot.first_tok_vtime = self.vtime
             slot.out.append(tok)
             slot.input_tok = tok
             slot.input_pos = p
@@ -894,19 +1079,16 @@ class ServeEngine:
                 self._retire(idx)
         else:
             slot.state = PREFILL
-            slot.tail = req.prompt[absorbed:]
+            slot.tail = list(req.prompt[absorbed:]) + list(replay)
             slot.tail_idx = 1
             slot.input_pos = absorbed
-            if self._uses_embeds:
-                slot.input_tok = 0
-                slot.input_x = np.asarray(slot.tail[0], np.float32)
-            else:
-                slot.input_tok = int(slot.tail[0])
+            self._feed(slot, slot.tail[0])
 
     # -- paged admission ---------------------------------------------------
 
     def _admit_paged(self, idx: int, slot: _Slot, req: Request,
-                     prefix: int) -> bool:
+                     prefix: int, replay: tuple = (),
+                     notify: bool = True) -> bool:
         p, g, ps = req.prompt_len, req.max_new_tokens, self._page_size
         n_seq = self._pages_per_seq
         tokens = None
@@ -1010,7 +1192,8 @@ class ServeEngine:
         if self._pool is not None:
             self.stats.pool_peak_pages = max(self.stats.pool_peak_pages,
                                              self._pool.pages_in_use)
-        self._start_slot(idx, slot, req, absorbed, logits)
+        self._start_slot(idx, slot, req, absorbed, logits,
+                         replay=replay, notify=notify)
         return True
 
     def _paged_room(self, need_new: int, reserve_exclude=()) -> bool:
@@ -1087,6 +1270,10 @@ class ServeEngine:
 
     def step_decode(self) -> None:
         tick_t0 = time.perf_counter()
+        if self.fault_injector is not None:
+            # simulated device/host loss lands here, mid-serving; the run
+            # loops catch WorkerFailure and call recover()
+            self.fault_injector.maybe_fail(self.stats.decode_steps)
         b = self.max_slots
         tok = np.zeros((b,), np.int32)
         # paged: inactive rows carry t = -1 so their writes land on the null
@@ -1131,17 +1318,15 @@ class ServeEngine:
             if s.state == PREFILL:
                 if s.tail_idx < len(s.tail):
                     s.input_pos += 1
-                    nxt = s.tail[s.tail_idx]
-                    if self._uses_embeds:
-                        s.input_x = np.asarray(nxt, np.float32)
-                    else:
-                        s.input_tok = int(nxt)
+                    self._feed(s, s.tail[s.tail_idx])
                     s.tail_idx += 1
                 else:
                     # last prompt token went in this tick -> first sample
+                    # (a replayed slot keeps its original first-token time)
                     s.state = DECODE
                     s.input_x = None
-                    s.first_tok_vtime = self.vtime
+                    if s.first_tok_vtime is None:
+                        s.first_tok_vtime = self.vtime
                     self._deliver(i, int(next_tok[i]))
             elif s.state == DECODE:
                 self._deliver(i, int(next_tok[i]))

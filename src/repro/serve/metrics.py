@@ -6,6 +6,9 @@
   * ``on_admit(req, vtime)``   — queue-wait accounting at slot claim
   * ``on_tick(engine, n, dt)`` — once per batched decode step (wall dt)
   * ``on_finish(result, eng)`` — once per retired request
+  * ``on_reshard(engine, ...)`` — once per elastic recovery (device loss
+    survived: mesh shrink + replay); logs a ``{"type": "reshard", ...}``
+    JSONL line with the recovery latency and surviving topology
 
 From those it maintains (a) cumulative counters that must agree with
 ``EngineStats`` (tokens, requests, preemptions — test-asserted), (b) a
@@ -62,6 +65,8 @@ class Telemetry:
         self.slo_tracked = 0
         self.slo_met = 0
         self.preemptions = 0
+        self.reshards = 0
+        self.recovery_seconds = 0.0
         self.ticks_seen = 0
         self._last_generated = None   # EngineStats.generated_tokens baseline
         self._f = open(jsonl_path, "a") if jsonl_path else None
@@ -127,6 +132,23 @@ class Telemetry:
         if self._f is not None:
             self._write({"type": "request", "ts": time.time(), **rec})
 
+    def on_reshard(self, engine, *, lost: int, seconds: float,
+                   in_flight: int) -> None:
+        topo = getattr(engine, "topology", None)
+        with self._lock:
+            self.reshards += 1
+            self.recovery_seconds += seconds
+        if self._f is not None:
+            self._write({
+                "type": "reshard", "ts": time.time(),
+                "vtime": engine.vtime, "lost_devices": lost,
+                "recovery_seconds": round(seconds, 6),
+                "in_flight_replayed": in_flight,
+                "topology": (None if topo is None else
+                             {"pods": topo.pods, "dp": topo.dp,
+                              "tp": topo.tp}),
+            })
+
     # -- reads ------------------------------------------------------------
 
     def _gauges(self, engine=None) -> dict:
@@ -141,6 +163,8 @@ class Telemetry:
                 "slo_tracked": self.slo_tracked,
                 "slo_met": self.slo_met,
                 "preemptions": self.preemptions,
+                "reshards": self.reshards,
+                "recovery_seconds": round(self.recovery_seconds, 6),
                 "ticks": self.ticks_seen,
             }
         wall = sum(t[0] for t in ticks)
@@ -185,6 +209,8 @@ class Telemetry:
                 "prefill_tokens": st.prefill_tokens,
                 "slot_utilization": st.slot_utilization,
                 "preemptions": st.preemptions,
+                "reshards": st.reshards,
+                "recovery_seconds": round(st.recovery_seconds, 6),
                 "kernel_fallbacks": engine.kernel_fallback_deltas(),
             }
             pool = engine.pool_stats()

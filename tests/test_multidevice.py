@@ -44,8 +44,9 @@ rt1 = Runtime()
 def lf(pp, bb):
     return MD.loss_fn(pp, cfg, bb, rt1)[0]
 l_single = jax.jit(lf)(p, batch)
-from repro.distributed import sharding as SH
-pspec = SH.param_specs(p)
+from repro.distributed.plan import ShardingPlan, Topology
+pspec = ShardingPlan.for_tree(p, Topology.from_mesh(mesh),
+                              validate=False).params
 ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
                             is_leaf=lambda x: isinstance(x, P))
 bspec = {"inputs": NamedSharding(mesh, P("data")), "labels": NamedSharding(mesh, P("data"))}
@@ -105,6 +106,11 @@ from repro.optim.grad import compressed_crosspod_mean, zeros_error
 g = {"w": jax.random.normal(jax.random.PRNGKey(5), (64, 64))}
 err0 = zeros_error(g)
 mean, err1 = compressed_crosspod_mean(g, err0, mesh_pp, pod_axis="pod")
+# Topology is accepted in place of a mesh (built internally)
+mean_t, _ = compressed_crosspod_mean(g, err0, Topology(dp=2, tp=2, pods=2),
+                                     pod_axis="pod")
+np.testing.assert_allclose(np.asarray(mean_t["w"]), np.asarray(mean["w"]),
+                           rtol=1e-6, atol=1e-6)
 # identical grads on both pods -> mean == dequantized value, small error
 rel = float(jnp.abs(mean["w"] - g["w"]).max() / jnp.abs(g["w"]).max())
 assert rel < 0.02, rel

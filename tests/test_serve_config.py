@@ -41,7 +41,9 @@ def test_kernel_mode_parse_members_and_aliases():
     assert KernelMode.COMPILED == "compiled"
     assert str(KernelMode.AUTO) == "auto"
     assert KERNEL_MODES == ("ref", "interpret", "pallas", "compiled",
-                            "tuned", "auto")
+                            "tuned", "auto", "sharded")
+    assert KernelMode.parse("spmd") is KernelMode.SHARDED
+    assert KernelMode.parse("gspmd") is KernelMode.SHARDED
 
 
 def test_kernel_mode_unknown_lists_valid_modes():

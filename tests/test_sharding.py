@@ -1,32 +1,37 @@
-"""Sharding rules: spec assignment, ZeRO-1 divisibility, cache specs."""
+"""Sharding rules: spec assignment, ZeRO-1 divisibility, cache specs.
+
+Exercises the rules through the ShardingPlan API (distributed/plan.py);
+the legacy ``sharding.param_specs``/``zero1_specs`` shims get their own
+warn-once coverage in test_sharding_plan.py.
+"""
 import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, reduced
-from repro.distributed import sharding
+from repro.distributed.plan import ShardingPlan, Topology
 from repro.models import model as MD
 
 
-def _specs(arch):
+def _plan(arch, topo=None):
     cfg = reduced(get_config(arch))
     p = jax.eval_shape(lambda: MD.init_params(jax.random.PRNGKey(0), cfg))
-    return p, sharding.param_specs(p)
+    return p, ShardingPlan.for_tree(p, topo, validate=False)
 
 
 def test_attention_tp_pattern():
-    p, s = _specs("bitnet-1.3b")
-    blk = s["layers"]["tail"][0]
+    p, plan = _plan("bitnet-1.3b")
+    blk = plan.params["layers"]["tail"][0]
     assert blk["attn"]["wq"]["w"] == P(None, "model")
     assert blk["attn"]["wo"]["w"] == P("model", None)
     assert blk["ffn"]["w_in"]["w"] == P(None, "model")
     assert blk["ffn"]["w_out"]["w"] == P("model", None)
-    assert s["embed"] == P("model", None)
+    assert plan.params["embed"] == P("model", None)
     assert blk["norm1"]["scale"] == P()
 
 
 def test_moe_expert_parallel():
-    p, s = _specs("qwen3-moe-30b-a3b")
-    blk = s["layers"]["tail"][0]
+    p, plan = _plan("qwen3-moe-30b-a3b")
+    blk = plan.params["layers"]["tail"][0]
     assert blk["moe"]["experts_gate"]["w"] == P("model", None, None)
     assert blk["moe"]["router"] in (P(), P(None, None))
 
@@ -36,15 +41,14 @@ def test_stacked_gets_group_axis():
     cfg = dataclasses.replace(reduced(get_config("bitnet-1.3b")),
                               n_layers=4, scan_layers=True)
     p = jax.eval_shape(lambda: MD.init_params(jax.random.PRNGKey(0), cfg))
-    s = sharding.param_specs(p)
-    assert s["layers"]["stacked"][0]["attn"]["wq"]["w"] == \
+    plan = ShardingPlan.for_tree(p, validate=False)
+    assert plan.params["layers"]["stacked"][0]["attn"]["wq"]["w"] == \
         P(None, None, "model")
 
 
 def test_zero1_divisibility():
-    p, _ = _specs("bitnet-1.3b")
-    specs = sharding.param_specs(p)
-    z = sharding.zero1_specs(specs, p, data_size=16)
+    p, plan = _plan("bitnet-1.3b", Topology(dp=16))
+    z = plan.zero1(p)
     leaves = jax.tree_util.tree_flatten_with_path(
         z, is_leaf=lambda x: isinstance(x, P))[0]
     shapes = jax.tree_util.tree_flatten_with_path(p)[0]
@@ -58,7 +62,7 @@ def test_serving_params_shardable():
     cfg = reduced(get_config("qwen3-moe-30b-a3b"))
     sp = jax.eval_shape(lambda: MD.export_serving(
         MD.init_params(jax.random.PRNGKey(0), cfg), cfg))
-    specs = sharding.param_specs(sp)
+    plan = ShardingPlan.for_tree(sp, validate=False)
     # packed expert weights shard on the expert axis
-    blk = specs["layers"]["tail"][0]["moe"]
+    blk = plan.params["layers"]["tail"][0]["moe"]
     assert blk["experts_gate"]["packed"] == P("model", None, None)
